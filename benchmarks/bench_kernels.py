@@ -1,0 +1,56 @@
+"""Microbenchmarks of the Pallas-kernel reference paths + the Gittins
+batch computation (wall-clock on CPU; the TPU numbers come from the
+dry-run roofline)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gittins_index_batch
+
+from .common import emit
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick=False):
+    rows = []
+    rng = np.random.default_rng(0)
+    # gittins batch (numpy scheduler path)
+    sup = np.sort(rng.uniform(1, 1e6, (1000, 32)), axis=1)
+    pr = rng.dirichlet(np.ones(32), 1000)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        gittins_index_batch(sup, pr)
+    rows.append(("kernels.gittins_batch_1000x32",
+                 round((time.perf_counter() - t0) / 10 * 1e6, 1),
+                 "us_per_call"))
+    # flash attention reference path
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jnp.asarray(rng.normal(0, 1, (1, 512, 8, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 512, 2, 64)), jnp.bfloat16)
+    us = _time(lambda a, b, c: flash_attention(a, b, c), q, k, k)
+    rows.append(("kernels.flash_attention_ref_512", round(us, 1),
+                 "us_per_call"))
+    # ssd scan reference path
+    from repro.kernels.ssd_scan.ops import ssd_scan_op
+    x = jnp.asarray(rng.normal(0, 1, (1, 512, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 1, (1, 512, 8)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (1, 512, 8)), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 0.5, (1, 512, 64)), jnp.float32)
+    us = _time(lambda *t: ssd_scan_op(*t), x, dt, a, bm, bm)
+    rows.append(("kernels.ssd_scan_ref_512", round(us, 1), "us_per_call"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PointPredictor, ProxyModelPredictor, Scheduler,
+                        SemanticHistoryPredictor, make_cost_model,
+                        make_policy)
+from repro.simulator import generate_workload, make_profile, simulate
+
+PROFILES = {n: make_profile(n) for n in ("sharegpt", "alpaca", "write")}
+ALL_PROFILES = list(PROFILES.values())
+
+# Paper Sec. 4.1 baselines with their OWN prediction methods:
+#   SSJF/LTR use a fine-tuned proxy-model point prediction (DistillBERT /
+#   OPT-125M stand-in); TRAIL re-predicts from model features (proxy
+#   distribution); SageSched uses the semantic history predictor.
+PAPER_PREDICTORS = {
+    "fcfs": None,
+    "fastserve": None,
+    "ssjf": "proxy_point",
+    "ltr": "proxy_point",
+    "trail": "proxy",
+    "mean": "semantic",
+    "gittins": "semantic",
+    "sagesched": "semantic",
+    "sagesched_aged": "semantic",
+}
+
+
+def seed_records(profiles=None, per_cluster: int = 60, seed: int = 5):
+    rng = np.random.default_rng(seed)
+    prompts, ils, ols = [], [], []
+    for prof in (profiles or ALL_PROFILES):
+        for c in prof.clusters:
+            for _ in range(per_cluster):
+                prompts.append(c.sample_prompt(rng))
+                ils.append(c.sample_input_len(rng))
+                ols.append(c.sample_output_len(rng))
+    return prompts, ils, ols
+
+
+def make_predictor(kind: str | None, records=None):
+    if kind is None:
+        return None
+    records = records or seed_records()
+    if kind == "semantic":
+        p = SemanticHistoryPredictor()
+        p.seed(*records)
+        return p
+    if kind in ("proxy", "proxy_point"):
+        p = ProxyModelPredictor()
+        for pr, il, ol in zip(*records):
+            p.observe(pr, il, ol)
+        p._fit()
+        return PointPredictor(p) if kind == "proxy_point" else p
+    raise KeyError(kind)
+
+
+def run_policy(policy: str, reqs, *, predictor_kind="paper",
+               cost_model="resource_bound", noise=0.0, records=None,
+               bucket_size=200, similarity_threshold=None):
+    if predictor_kind == "paper":
+        predictor_kind = PAPER_PREDICTORS[policy]
+    pred = make_predictor(predictor_kind, records)
+    if similarity_threshold is not None and \
+            isinstance(pred, SemanticHistoryPredictor):
+        pred.similarity_threshold = similarity_threshold
+    sched = Scheduler(policy=make_policy(policy), predictor=pred,
+                      cost_model=make_cost_model(cost_model),
+                      noise_weight=noise, bucket_size=bucket_size)
+    return simulate(reqs, sched)
+
+
+def workload(n=600, rps=8.0, seed=1, datasets=("sharegpt", "alpaca",
+                                               "write")):
+    return generate_workload([PROFILES[d] for d in datasets], n, rps=rps,
+                             seed=seed)
+
+
+def emit(rows):
+    """name,us_per_call,derived CSV convention (harness contract)."""
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")

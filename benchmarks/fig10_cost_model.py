@@ -1,0 +1,21 @@
+"""Paper Fig. 10 (Sec. 4.3.2): cost-model ablation — resource-bound
+(O^2/2 + I*O) vs output-length-only vs weighted overall-length."""
+
+from .common import emit, run_policy, seed_records, workload
+
+
+def run(n=600, rps=8.0, quick=False):
+    rows = []
+    reqs = workload(n=n, rps=rps)
+    records = seed_records()
+    for cm in ("resource_bound", "output_length", "overall_length"):
+        res = run_policy("sagesched", reqs, predictor_kind="semantic",
+                         cost_model=cm, records=records)
+        rows.append((f"fig10.ttlt.{cm}", round(res.mean_ttlt(), 3),
+                     "mean_ttlt_s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Fig. 11 (Sec. 4.3.3): scheduling-policy ablation — Mean vs
+Gittins-no-refresh vs SageSched (Gittins+refresh), with and without the
+1:4 uniform prediction-noise injection."""
+
+from .common import emit, run_policy, seed_records, workload
+
+
+def run(n=600, rps=8.0, quick=False):
+    rows = []
+    reqs = workload(n=n, rps=rps)
+    records = seed_records()
+    for pol in ("ssjf", "mean", "gittins", "sagesched"):
+        for noise, tag in ((0.0, "clean"), (0.2, "noisy")):
+            res = run_policy(pol, reqs, predictor_kind="semantic",
+                             noise=noise, records=records)
+            rows.append((f"fig11.ttlt.{pol}.{tag}",
+                         round(res.mean_ttlt(), 3), "mean_ttlt_s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper Fig. 12 (Sec. 4.4): scheduling overhead at cluster scale —
+per-request predict+schedule wall-clock at 1..64 nodes (8 RPS/node,
+queue depth up to 1000, 10k history)."""
+
+from repro.simulator import measure_scheduler_overhead
+
+from .common import emit
+
+
+def run(quick=False):
+    rows = []
+    nodes = (1, 8, 64) if quick else (1, 4, 16, 64)
+    for n in nodes:
+        o = measure_scheduler_overhead(n, n_probe=30 if quick else 100)
+        rows.append((f"fig12.predict_ms.n{n}", round(o["predict_ms"], 3),
+                     "per_request_ms"))
+        rows.append((f"fig12.schedule_ms.n{n}", round(o["schedule_ms"], 3),
+                     "per_request_ms"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Fig. 13: sensitivity — (a) similarity threshold tau, (b) Gittins
+refresh bucket size."""
+
+from .common import emit, run_policy, seed_records, workload
+
+
+def run(n=500, rps=8.0, quick=False):
+    rows = []
+    reqs = workload(n=n, rps=rps)
+    records = seed_records()
+    taus = (0.6, 0.8, 0.95) if quick else (0.4, 0.6, 0.8, 0.9, 0.95)
+    for tau in taus:
+        res = run_policy("sagesched", reqs, predictor_kind="semantic",
+                         records=records, similarity_threshold=tau)
+        rows.append((f"fig13a.ttlt.tau{tau}", round(res.mean_ttlt(), 3),
+                     "mean_ttlt_s"))
+    buckets = (50, 200, 800) if quick else (25, 50, 100, 200, 400, 800)
+    for bs in buckets:
+        res = run_policy("sagesched", reqs, predictor_kind="semantic",
+                         records=records, bucket_size=bs)
+        rows.append((f"fig13b.ttlt.bucket{bs}", round(res.mean_ttlt(), 3),
+                     "mean_ttlt_s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

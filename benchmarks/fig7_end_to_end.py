@@ -1,0 +1,27 @@
+"""Paper Fig. 7: end-to-end mean TTLT/TTFT on mixed datasets vs RPS,
+every scheduler with its paper-faithful predictor."""
+
+from .common import emit, run_policy, seed_records, workload
+
+POLICIES = ("fcfs", "fastserve", "ssjf", "ltr", "trail", "sagesched",
+            "sagesched_aged")  # last = beyond-paper (§Beyond)
+
+
+def run(n=600, quick=False):
+    rows = []
+    records = seed_records()
+    rates = (4.0, 8.0) if quick else (2.0, 4.0, 6.0, 8.0)
+    for rps in rates:
+        reqs = workload(n=n, rps=rps)
+        for pol in POLICIES:
+            res = run_policy(pol, reqs, records=records)
+            rows.append((f"fig7.ttlt.rps{rps:g}.{pol}",
+                         round(res.mean_ttlt(), 3), "mean_ttlt_s"))
+            rows.append((f"fig7.ttft.rps{rps:g}.{pol}",
+                         round(res.mean_ttft(), 3), "mean_ttft_s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

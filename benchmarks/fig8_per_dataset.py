@@ -1,0 +1,24 @@
+"""Paper Fig. 8: per-dataset TTLT (ShareGPT / Alpaca-Summarization /
+Document-Write separately)."""
+
+from .common import emit, run_policy, seed_records, workload
+
+POLICIES = ("fcfs", "fastserve", "ssjf", "ltr", "trail", "sagesched")
+
+
+def run(n=500, rps=8.0, quick=False):
+    rows = []
+    for ds in ("sharegpt", "alpaca", "write"):
+        reqs = workload(n=n, rps=rps, datasets=(ds,))
+        records = seed_records()
+        for pol in (POLICIES if not quick else ("fcfs", "trail",
+                                                "sagesched")):
+            res = run_policy(pol, reqs, records=records)
+            rows.append((f"fig8.ttlt.{ds}.{pol}", round(res.mean_ttlt(), 3),
+                         "mean_ttlt_s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 9 (Sec. 4.3.1): predictor ablation — semantic-aware
+history-based vs semantic-unaware history-based vs LLM(proxy)-based
+distribution predictor, all under the SageSched policy."""
+
+import numpy as np
+
+from repro.core import LengthHistoryPredictor, Scheduler, make_policy
+from repro.simulator import simulate
+
+from .common import emit, make_predictor, seed_records, workload
+
+def run(n=600, rps=8.0, quick=False):
+    rows = []
+    reqs = workload(n=n, rps=rps)
+    records = seed_records()
+    cases = {
+        "semantic_history": make_predictor("semantic", records),
+        "length_history": None,     # built below (needs observe() seeding)
+        "proxy_distribution": make_predictor("proxy", records),
+    }
+    lh = LengthHistoryPredictor()
+    for pr, il, ol in zip(*records):
+        lh.observe(pr, il, ol)
+    cases["length_history"] = lh
+    for name, pred in cases.items():
+        res = simulate(reqs, Scheduler(policy=make_policy("sagesched"),
+                                       predictor=pred))
+        rows.append((f"fig9.ttlt.{name}", round(res.mean_ttlt(), 3),
+                     "mean_ttlt_s"))
+    # prediction accuracy + latency microbenchmark (paper Sec. 4.3.1 text)
+    import time
+    pred = make_predictor("semantic", records)
+    t0 = time.perf_counter()
+    for r in reqs[:200]:
+        pred.predict(r.prompt, r.input_len)
+    per_req_ms = (time.perf_counter() - t0) / 200 * 1e3
+    rows.append(("fig9.predict_latency_ms", round(per_req_ms, 4),
+                 "per_request_ms"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Roofline report (deliverable g): reads dryrun_results.json and prints
+the three-term roofline per (arch x shape x mesh) as CSV rows."""
+
+import json
+import os
+
+from .common import emit
+
+
+def run(path=None, quick=False):
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "dryrun_results.json")
+    if not os.path.exists(path):
+        emit([("roofline.missing", 0, "run repro.launch.dryrun --all first")])
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        tag = key.replace("|", ".")
+        rows.append((f"roofline.{tag}.compute_s", f"{r['compute_s']:.3e}",
+                     "seconds"))
+        rows.append((f"roofline.{tag}.memory_s", f"{r['memory_s']:.3e}",
+                     "seconds"))
+        rows.append((f"roofline.{tag}.collective_s",
+                     f"{r['collective_s']:.3e}", "seconds"))
+        rows.append((f"roofline.{tag}.dominant", r["dominant"],
+                     f"useful_ratio={rec.get('useful_flops_ratio')}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+
+Prints ``name,value,derived`` CSV rows (harness contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_kernels, fig7_end_to_end, fig8_per_dataset,
+               fig9_predictor, fig10_cost_model, fig11_policy,
+               fig12_scalability, fig13_sensitivity, roofline)
+
+SUITES = {
+    "fig7": fig7_end_to_end.run,
+    "fig8": fig8_per_dataset.run,
+    "fig9": fig9_predictor.run,
+    "fig10": fig10_cost_model.run,
+    "fig11": fig11_policy.run,
+    "fig12": fig12_scalability.run,
+    "fig13": fig13_sensitivity.run,
+    "roofline": roofline.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for CI")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    for name in names:
+        if name not in SUITES:
+            print(f"unknown suite {name!r}; have {list(SUITES)}",
+                  file=sys.stderr)
+            sys.exit(2)
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        SUITES[name](quick=args.quick)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

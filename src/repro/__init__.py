@@ -1,0 +1,5 @@
+"""repro: SageSched (Gan et al., 2026) reproduction — an LLM serving
+framework with uncertainty- and hybridity-aware request scheduling,
+built in JAX with Pallas TPU kernels."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,34 @@
+"""SageSched core: the paper's contribution as a composable library.
+
+Public API:
+    PromptEmbedder, HistoryStore                      (Sec. 3.1 substrate)
+    SemanticHistoryPredictor + ablation predictors    (Sec. 3.1 / 4.3.1)
+    ResourceBoundCost + ablation cost models          (Sec. 3.2 / 4.3.2)
+    gittins_index / gittins_index_batch               (Sec. 3.3 math)
+    make_policy: fcfs/fastserve/ssjf/ltr/trail/mean/gittins/sagesched
+    Scheduler: the Fig. 3 workflow facade
+"""
+
+from .cost_model import (CostDistribution, CostModel, EncDecCost, HybridCost,
+                         LinearCost, OutputLengthCost, OverallLengthCost,
+                         ResourceBoundCost, make_cost_model)
+from .embedding import PromptEmbedder
+from .gittins import gittins_index, gittins_index_batch, mean_index
+from .history import HistoryRecord, HistoryStore
+from .policies import POLICY_NAMES, Policy, make_policy
+from .predictor import (LengthDistribution, LengthHistoryPredictor,
+                        OraclePredictor, PointPredictor, Predictor,
+                        ProxyModelPredictor, SemanticHistoryPredictor,
+                        empirical_distribution)
+from .scheduler import ScheduledRequest, Scheduler
+
+__all__ = [
+    "CostDistribution", "CostModel", "EncDecCost", "HybridCost", "LinearCost",
+    "OutputLengthCost", "OverallLengthCost", "ResourceBoundCost",
+    "make_cost_model", "PromptEmbedder", "gittins_index",
+    "gittins_index_batch", "mean_index", "HistoryRecord", "HistoryStore",
+    "POLICY_NAMES", "Policy", "make_policy", "LengthDistribution",
+    "LengthHistoryPredictor", "OraclePredictor", "PointPredictor",
+    "Predictor", "ProxyModelPredictor", "SemanticHistoryPredictor",
+    "empirical_distribution", "ScheduledRequest", "Scheduler",
+]

@@ -1,0 +1,206 @@
+"""Resource-bound-based service-cost modeling (paper Sec. 3.2).
+
+The paper's key observation: whether the backend is *memory-bound* (cost =
+cumulative KVCache occupation, ``sum_{l=1}^{I+O} l * U_MT``) or
+*compute-bound* (cost = cumulative attention compute,
+``sum_{l=I}^{I+O} l * U_CT``), the service cost of a request with input
+length I and output length O follows the same paradigm::
+
+    C(I, O) = O^2 / 2 + I * O        (unit constants cancel in rank order)
+
+We implement that model, the two ablation baselines from Sec. 4.3.2
+(output-length-only and weighted-overall-length), and the per-architecture
+adaptations documented in DESIGN.md Sec. 4 (linear cost for attention-free
+SSMs, mixed cost for hybrids, enc-dec cost with one-shot encoder term).
+
+Every model exposes:
+  * ``total(I, O)``          — scalar cost of a full request,
+  * ``attained(I, o)``       — cost already *consumed* after generating
+                                ``o`` of the eventual O tokens (used to
+                                refresh the Gittins index at runtime),
+  * ``distribution(I, length_dist)`` — pushforward of an output-length
+                                distribution through ``total``.
+
+``attained`` is exact: it is the same cumulative sum truncated at ``o``,
+so remaining cost = total − attained, consistent with SRPT/Gittins theory.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "CostModel",
+    "ResourceBoundCost",
+    "OutputLengthCost",
+    "OverallLengthCost",
+    "LinearCost",
+    "HybridCost",
+    "EncDecCost",
+    "CostDistribution",
+    "make_cost_model",
+]
+
+
+@dataclass(frozen=True)
+class CostDistribution:
+    """Discrete cost distribution: support (ascending) + probabilities."""
+
+    support: np.ndarray  # (k,) float64, strictly ascending
+    probs: np.ndarray    # (k,) float64, sums to 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "support", np.asarray(self.support, np.float64))
+        object.__setattr__(self, "probs", np.asarray(self.probs, np.float64))
+
+    @property
+    def mean(self) -> float:
+        return float(np.sum(self.support * self.probs))
+
+    def shift(self, attained: float) -> "CostDistribution":
+        """Condition on X > ``attained`` and re-origin at it (the Bayesian
+        update behind the paper's runtime Gittins refresh: mass at costs the
+        request has already consumed without finishing is impossible and is
+        conditioned out).  If the whole predicted mass is exhausted, the
+        remaining cost collapses to "imminent completion"."""
+        alive = self.support > attained
+        if not alive.any():
+            # Prediction exhausted: the request already outran every
+            # predicted outcome.  LLM length distributions have decreasing
+            # hazard rates (lognormal-like), so the rational belief is a
+            # LONG remaining tail, not imminent completion — assume one
+            # more max-support's worth of cost (pinning such requests to
+            # top priority instead measurably inflates mean TTLT;
+            # EXPERIMENTS.md §Perf).
+            tail = max(float(self.support[-1]), 1.0)
+            return CostDistribution(np.array([tail]), np.array([1.0]))
+        rem = self.support[alive] - attained
+        probs = self.probs[alive]
+        return CostDistribution(rem, probs / probs.sum())
+
+
+class CostModel:
+    """Base class; subclasses override ``total`` (vectorized over O)."""
+
+    name = "base"
+
+    def total(self, input_len, output_len):
+        raise NotImplementedError
+
+    def attained(self, input_len: int, generated: int) -> float:
+        """Cost consumed so far, after ``generated`` output tokens."""
+        return float(self.total(input_len, generated))
+
+    def distribution(self, input_len: int, lengths: np.ndarray,
+                     probs: np.ndarray) -> CostDistribution:
+        """Pushforward of an output-length distribution through ``total``.
+
+        ``lengths``/``probs`` describe P(O = lengths[i]) = probs[i].
+        """
+        costs = np.asarray(self.total(input_len, np.asarray(lengths, np.float64)))
+        order = np.argsort(costs, kind="stable")
+        costs, probs = costs[order], np.asarray(probs, np.float64)[order]
+        uniq, inv = np.unique(costs, return_inverse=True)
+        merged = np.zeros_like(uniq)
+        np.add.at(merged, inv, probs)
+        merged = merged / merged.sum()
+        return CostDistribution(uniq, merged)
+
+
+class ResourceBoundCost(CostModel):
+    """The paper's model: C = O^2/2 + I*O (Sec. 3.2)."""
+
+    name = "resource_bound"
+
+    def total(self, input_len, output_len):
+        o = np.asarray(output_len, np.float64)
+        return o * o / 2.0 + float(input_len) * o
+
+
+class OutputLengthCost(CostModel):
+    """Ablation: C = O (SSJF / LTR / TRAIL cost proxy)."""
+
+    name = "output_length"
+
+    def total(self, input_len, output_len):
+        return np.asarray(output_len, np.float64)
+
+
+class OverallLengthCost(CostModel):
+    """Ablation: C = I + 2*O (VTC-style weighted token count,
+    Sheng et al. 2024; the paper doubles the output weight)."""
+
+    name = "overall_length"
+
+    def total(self, input_len, output_len):
+        return float(input_len) + 2.0 * np.asarray(output_len, np.float64)
+
+
+class LinearCost(CostModel):
+    """SSM adaptation: constant state, constant per-step cost →
+    C = (I + O) (DESIGN.md Sec. 4, mamba2)."""
+
+    name = "linear"
+
+    def total(self, input_len, output_len):
+        return float(input_len) + np.asarray(output_len, np.float64)
+
+
+class HybridCost(CostModel):
+    """Hybrid (Zamba2): alpha * quadratic attention term from the shared
+    attention blocks + beta * linear SSM term."""
+
+    name = "hybrid"
+
+    def __init__(self, attn_fraction: float = 0.15, ssm_fraction: float = 0.85,
+                 ssm_step_weight: float = 64.0):
+        # ssm_step_weight converts "one SSM step" into KV-token-step units so
+        # the two terms are commensurable (d_state-sized recurrent state).
+        self.alpha = attn_fraction
+        self.beta = ssm_fraction * ssm_step_weight
+
+    def total(self, input_len, output_len):
+        o = np.asarray(output_len, np.float64)
+        quad = o * o / 2.0 + float(input_len) * o
+        lin = float(input_len) + o
+        return self.alpha * quad + self.beta * lin
+
+
+class EncDecCost(CostModel):
+    """Encoder-decoder (Seamless backbone): one-shot encoder cost ~ I^2
+    (prefill-like), decoder self-attention quadratic in O, cross-attention
+    linear in I per decoded token."""
+
+    name = "enc_dec"
+
+    def __init__(self, encoder_weight: float = 0.5):
+        self.encoder_weight = encoder_weight
+
+    def total(self, input_len, output_len):
+        o = np.asarray(output_len, np.float64)
+        i = float(input_len)
+        return o * o / 2.0 + i * o + self.encoder_weight * i * i
+
+    def attained(self, input_len: int, generated: int) -> float:
+        # encoder cost is paid up-front at prefill
+        i = float(input_len)
+        g = float(generated)
+        return g * g / 2.0 + i * g + self.encoder_weight * i * i
+
+
+_REGISTRY = {
+    "resource_bound": ResourceBoundCost,
+    "output_length": OutputLengthCost,
+    "overall_length": OverallLengthCost,
+    "linear": LinearCost,
+    "hybrid": HybridCost,
+    "enc_dec": EncDecCost,
+}
+
+
+def make_cost_model(name: str, **kwargs) -> CostModel:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown cost model {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

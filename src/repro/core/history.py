@@ -1,0 +1,102 @@
+"""FIFO history store with exact (flat) cosine-similarity search.
+
+Paper Sec. 3.1: "Our history window has a size of 10,000 records and keeps
+updating in a FIFO manner. ... We use the efficient FAISS IndexFlat tool to
+perform embedding search."  FAISS IndexFlat is an exact brute-force search;
+we reproduce the identical algorithm as a single matmul over a pre-allocated
+ring buffer — no external dependency, same results, and comparable speed at
+the 10k scale (<<1 ms).
+
+The store also supports *seeding* with public-dataset records to cover the
+warm-up phase (paper footnote 3: "In cases where the high-similarity
+requests are insufficient ... we augment the searching set with the requests
+from public datasets").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["HistoryRecord", "HistoryStore"]
+
+
+@dataclass(frozen=True)
+class HistoryRecord:
+    """One completed inference: what the predictor learns from."""
+
+    embedding: np.ndarray  # (dim,) unit vector
+    input_len: int
+    output_len: int
+
+
+class HistoryStore:
+    """Ring buffer of completed requests + exact cosine search.
+
+    All columns are stored as dense numpy arrays so a similarity query is a
+    single (n, d) @ (d,) matvec — the IndexFlatIP equivalent.
+    """
+
+    def __init__(self, dim: int, capacity: int = 10_000):
+        self.dim = dim
+        self.capacity = capacity
+        self._emb = np.zeros((capacity, dim), dtype=np.float32)
+        self._input_len = np.zeros(capacity, dtype=np.int64)
+        self._output_len = np.zeros(capacity, dtype=np.int64)
+        self._next = 0  # ring cursor
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def add(self, embedding: np.ndarray, input_len: int, output_len: int) -> None:
+        """Record one completed request (FIFO eviction past capacity)."""
+        i = self._next
+        self._emb[i] = embedding
+        self._input_len[i] = int(input_len)
+        self._output_len[i] = int(output_len)
+        self._next = (i + 1) % self.capacity
+        self._size = min(self._size + 1, self.capacity)
+
+    def add_batch(self, embeddings: np.ndarray, input_lens, output_lens) -> None:
+        for e, i, o in zip(embeddings, input_lens, output_lens):
+            self.add(e, int(i), int(o))
+
+    # ---------------------------------------------------------------- search
+
+    def search_similar(self, embedding: np.ndarray, threshold: float
+                       ) -> np.ndarray:
+        """Indices of stored records with cosine similarity >= threshold.
+
+        Exact flat search (FAISS IndexFlatIP semantics on unit vectors).
+        """
+        if self._size == 0:
+            return np.zeros(0, dtype=np.int64)
+        sims = self._emb[: self._size] @ embedding.astype(np.float32)
+        return np.nonzero(sims >= threshold)[0]
+
+    def search_by_input_len(self, input_len: int, rel_tol: float = 0.2,
+                            min_matches: int = 8) -> np.ndarray:
+        """Semantic-UNAWARE ablation (Sec. 4.3.1 baseline 1): match by
+        input-length proximity instead of prompt content."""
+        if self._size == 0:
+            return np.zeros(0, dtype=np.int64)
+        lens = self._input_len[: self._size]
+        tol = max(1, int(rel_tol * max(1, input_len)))
+        idx = np.nonzero(np.abs(lens - input_len) <= tol)[0]
+        if idx.size < min_matches:
+            # widen to the nearest ``min_matches`` records by |Δ input_len|
+            order = np.argsort(np.abs(lens - input_len), kind="stable")
+            idx = order[: min(min_matches, self._size)]
+        return idx
+
+    def output_lengths(self, indices: np.ndarray) -> np.ndarray:
+        return self._output_len[indices]
+
+    def input_lengths(self, indices: np.ndarray) -> np.ndarray:
+        return self._input_len[indices]
+
+    def global_output_lengths(self) -> np.ndarray:
+        """All recorded output lengths (recent-window marginal)."""
+        return self._output_len[: self._size].copy()

@@ -1,0 +1,221 @@
+"""Scheduling policies: SageSched and every baseline the paper compares.
+
+A policy maps a request's scheduler-side state to a scalar *priority*
+(smaller = served first).  The Scheduler (scheduler.py) owns state updates
+and bucketized refresh; policies are pure priority functions plus two
+capability flags:
+
+  * ``preemptive``   — may a running request be displaced by a smaller
+                        priority arrival?
+  * ``refreshing``   — does the priority depend on runtime progress (and
+                        hence need recomputation at bucket boundaries)?
+
+Implemented policies (paper Sec. 2.2 / 4.1 / 4.3.3):
+
+  fcfs        FCFS, vLLM/SGLang default (Kwon et al. 2023).
+  fastserve   MLFQ with exponentially growing quantums approximating SRPT
+              without predictions (Wu et al. 2023).
+  ssjf        Shortest-Job-First on a *point* output-length prediction
+              (Qiu et al. 2024).
+  ltr         Learning-to-rank: relative order of predicted lengths
+              (Fu et al. 2024) — rank-preserving point estimate.
+  trail       SRPT-approx with per-bucket re-predicted remaining length
+              (Shahout et al. 2025).
+  mean        Expected remaining *cost* (ablation, Fig. 6/11 'Mean').
+  gittins     Gittins index at admission, never refreshed (ablation).
+  sagesched   Gittins index + runtime bucket refresh — the paper's policy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .gittins import gittins_index, mean_index
+
+__all__ = ["Policy", "make_policy", "POLICY_NAMES"]
+
+
+class Policy:
+    name = "base"
+    preemptive = False
+    refreshing = False
+    time_varying = False   # priority depends on wall/sim time (aging)
+
+    def priority(self, sr) -> float:  # sr: scheduler.ScheduledRequest
+        raise NotImplementedError
+
+    def next_boundary(self, sr, bucket_size: int) -> float:
+        """Generated-token count at which the priority must next be
+        recomputed.  Default: the paper's cost-bucket boundaries."""
+        if not self.refreshing:
+            return float("inf")
+        return (sr.generated // bucket_size + 1) * bucket_size
+
+
+class FCFSPolicy(Policy):
+    name = "fcfs"
+
+    def priority(self, sr) -> float:
+        return sr.arrival
+
+
+class FastServePolicy(Policy):
+    """MLFQ: requests enter the top queue; after consuming the level's
+    quantum of service they are demoted.  Priority = (level, arrival).
+    Levels are encoded into one float: level * LEVEL_SPAN + arrival_rank."""
+
+    name = "fastserve"
+    preemptive = True
+    refreshing = True
+    LEVEL_SPAN = 1e12
+
+    def __init__(self, base_quantum: int = 64, n_levels: int = 8):
+        self.base_quantum = base_quantum
+        self.n_levels = n_levels
+
+    def level_of(self, service_tokens: int) -> int:
+        """MLFQ level after ``service_tokens`` tokens of service: quantum of
+        level k is base_quantum * 2^k; demote when cumulative budget spent."""
+        budget, q = 0, self.base_quantum
+        for level in range(self.n_levels):
+            budget += q
+            if service_tokens < budget:
+                return level
+            q *= 2
+        return self.n_levels - 1
+
+    def priority(self, sr) -> float:
+        return self.level_of(sr.generated) * self.LEVEL_SPAN + sr.arrival
+
+    def next_boundary(self, sr, bucket_size: int) -> float:
+        """Demotion happens at cumulative quantum boundaries, not at the
+        Gittins cost buckets."""
+        budget, q = 0, self.base_quantum
+        for _ in range(self.n_levels):
+            budget += q
+            if sr.generated < budget:
+                return budget
+            q *= 2
+        return float("inf")
+
+
+class SSJFPolicy(Policy):
+    """Non-preemptive SJF on the predicted mean output length."""
+
+    name = "ssjf"
+
+    def priority(self, sr) -> float:
+        return sr.length_dist.mean
+
+
+class LTRPolicy(Policy):
+    """Learning-to-rank: only the relative order matters; we use the
+    predicted median, which is what a rank model recovers (Fu et al. 2024
+    optimize Kendall's tau against the true length order)."""
+
+    name = "ltr"
+
+    def priority(self, sr) -> float:
+        return float(sr.length_dist.quantile(0.5))
+
+
+class TRAILPolicy(Policy):
+    """SRPT-approx: expected REMAINING output length, re-evaluated at bucket
+    boundaries (stand-in for TRAIL's per-iteration MLP repredictions).
+    Cost proxy is the output length — TRAIL ignores demand hybridity."""
+
+    name = "trail"
+    preemptive = True
+    refreshing = True
+
+    def priority(self, sr) -> float:
+        lens = sr.length_dist.lengths.astype(np.float64)
+        probs = sr.length_dist.probs
+        remaining = np.maximum(lens - sr.generated, 1.0)
+        alive = lens > sr.generated
+        if alive.any():
+            p = probs * alive
+            return float(np.sum(remaining * p) / p.sum())
+        return 1.0  # predicted mass exhausted: completion imminent
+
+
+class MeanPolicy(Policy):
+    """Expected remaining service cost (cost-model aware, no Gittins)."""
+
+    name = "mean"
+    preemptive = True
+    refreshing = True
+
+    def priority(self, sr) -> float:
+        return mean_index(sr.cost_dist, sr.attained_cost)
+
+
+class GittinsPolicy(Policy):
+    """Gittins index computed once at admission (no runtime refresh)."""
+
+    name = "gittins"
+    preemptive = True
+    refreshing = False
+
+    def priority(self, sr) -> float:
+        return gittins_index(sr.cost_dist, 0.0)
+
+
+class SageSchedPolicy(Policy):
+    """The paper's policy: Gittins index over the remaining-cost
+    distribution, refreshed at bucket boundaries."""
+
+    name = "sagesched"
+    preemptive = True
+    refreshing = True
+
+    def priority(self, sr) -> float:
+        return gittins_index(sr.cost_dist, sr.attained_cost)
+
+
+class AgedSageSchedPolicy(Policy):
+    """BEYOND-PAPER: Gittins with starvation bounding.
+
+    Pure Gittins ordering can starve long requests indefinitely under
+    sustained load (unbounded p99 TTLT).  We discount the index by the
+    request's queueing age — an aging factor standard in OS schedulers
+    but absent from the paper: priority = G / (1 + age/tau).  As tau ->
+    inf this is exactly SageSched; small tau approaches FCFS.  Age is
+    tracked in *scheduler decisions* via the arrival timestamp, so the
+    policy stays stateless.  Evaluated in EXPERIMENTS.md §Beyond.
+    """
+
+    name = "sagesched_aged"
+    preemptive = True
+    refreshing = True
+    time_varying = True
+
+    def __init__(self, tau_age: float = 60.0):
+        self.tau_age = tau_age
+        self.now = 0.0      # injected by Scheduler.set_now()
+
+    def priority(self, sr) -> float:
+        g = gittins_index(sr.cost_dist, sr.attained_cost)
+        age = max(0.0, self.now - sr.arrival)
+        return g / (1.0 + age / self.tau_age)
+
+
+_REGISTRY = {
+    "fcfs": FCFSPolicy,
+    "fastserve": FastServePolicy,
+    "ssjf": SSJFPolicy,
+    "ltr": LTRPolicy,
+    "trail": TRAILPolicy,
+    "mean": MeanPolicy,
+    "gittins": GittinsPolicy,
+    "sagesched": SageSchedPolicy,
+    "sagesched_aged": AgedSageSchedPolicy,
+}
+
+POLICY_NAMES = tuple(_REGISTRY)
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

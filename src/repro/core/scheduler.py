@@ -1,0 +1,163 @@
+"""SageSched scheduler facade (paper Fig. 3 workflow).
+
+Wires the three techniques together for use by both the real serving
+engine (repro.serving.engine) and the discrete-event simulator
+(repro.simulator):
+
+    arrival  -> predictor.predict()  -> length distribution
+             -> cost_model.distribution() -> cost distribution
+             -> policy.priority()    -> queue index
+
+    progress -> attained cost grows; *refreshing* policies recompute the
+                priority only when the request crosses a token-bucket
+                boundary (default bucket_size=200 tokens, Fig. 13b) —
+                balancing rescheduling timeliness against thrashing.
+
+    completion -> predictor.observe() feeds the history window.
+
+The scheduler is backend-agnostic: callers ask for ``order()`` over any
+subset of live request ids and apply their own admission constraints
+(KV capacity, max batch) — exactly how vLLM separates policy from the
+block manager.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cost_model import CostDistribution, CostModel, ResourceBoundCost
+from .policies import Policy, SageSchedPolicy
+from .predictor import LengthDistribution, Predictor, SemanticHistoryPredictor
+
+__all__ = ["ScheduledRequest", "Scheduler"]
+
+
+@dataclass
+class ScheduledRequest:
+    """Scheduler-side state for one live request."""
+
+    request_id: str
+    prompt: str
+    input_len: int
+    arrival: float
+    length_dist: LengthDistribution
+    cost_dist: CostDistribution
+    generated: int = 0            # output tokens produced so far
+    attained_cost: float = 0.0    # cost consumed so far (cost-model units)
+    next_refresh: float = float("inf")  # generated count of next refresh
+    priority: float = 0.0         # cached policy priority (smaller = sooner)
+    noise_rng: np.random.Generator | None = field(default=None, repr=False)
+
+
+class Scheduler:
+    """Predictor + cost model + policy, with bucketized priority refresh."""
+
+    def __init__(self,
+                 predictor: Predictor | None = None,
+                 cost_model: CostModel | None = None,
+                 policy: Policy | None = None,
+                 bucket_size: int = 200,
+                 noise_weight: float = 0.0,
+                 noise_max_len: int = 4096,
+                 clock=time.monotonic):
+        self.predictor = predictor or SemanticHistoryPredictor()
+        self.cost_model = cost_model or ResourceBoundCost()
+        self.policy = policy or SageSchedPolicy()
+        self.bucket_size = max(1, bucket_size)
+        self.noise_weight = noise_weight  # Fig. 11 robustness experiment
+        self.noise_max_len = noise_max_len
+        self.clock = clock
+        self._live: dict[str, ScheduledRequest] = {}
+        self._arrival_seq = 0  # tie-break for identical clock readings
+        self.stats = {"predictions": 0, "refreshes": 0, "completions": 0}
+
+    # ------------------------------------------------------------- lifecycle
+
+    def admit(self, request_id: str, prompt: str, input_len: int,
+              arrival: float | None = None) -> ScheduledRequest:
+        """Register an arriving request: predict, cost, prioritize."""
+        if request_id in self._live:
+            raise KeyError(f"request {request_id!r} already admitted")
+        arrival = self.clock() if arrival is None else arrival
+        length_dist = self.predictor.predict(prompt, input_len)
+        if self.noise_weight > 0.0:
+            length_dist = length_dist.mix_uniform(self.noise_weight,
+                                                  self.noise_max_len)
+        self.stats["predictions"] += 1
+        cost_dist = self.cost_model.distribution(
+            input_len, length_dist.lengths, length_dist.probs)
+        # encode arrival order into the float so FCFS ties stay stable
+        self._arrival_seq += 1
+        sr = ScheduledRequest(
+            request_id=request_id, prompt=prompt, input_len=input_len,
+            arrival=arrival + self._arrival_seq * 1e-9,
+            length_dist=length_dist, cost_dist=cost_dist)
+        sr.priority = self.policy.priority(sr)
+        sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
+        self._live[request_id] = sr
+        return sr
+
+    def on_progress(self, request_id: str, generated: int) -> None:
+        """Report that ``generated`` output tokens now exist.  Refreshing
+        policies recompute the priority only at their refresh boundaries
+        (cost buckets for SageSched, quantum edges for FastServe)."""
+        sr = self._live[request_id]
+        if generated == sr.generated:
+            return
+        sr.generated = generated
+        if self.policy.refreshing and generated >= sr.next_refresh:
+            sr.attained_cost = self.cost_model.attained(sr.input_len, generated)
+            sr.priority = self.policy.priority(sr)
+            sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
+            self.stats["refreshes"] += 1
+
+    def tokens_to_refresh(self, request_id: str) -> float:
+        """Output tokens until this request's next priority refresh
+        (simulator fast-forward bound)."""
+        sr = self._live[request_id]
+        return sr.next_refresh - sr.generated
+
+    def on_complete(self, request_id: str, output_len: int) -> None:
+        """Request finished: feed the predictor's history and drop state."""
+        sr = self._live.pop(request_id)
+        self.predictor.observe(sr.prompt, sr.input_len, output_len)
+        self.stats["completions"] += 1
+
+    def on_abort(self, request_id: str) -> None:
+        self._live.pop(request_id, None)
+
+    # ------------------------------------------------------------- queries
+
+    def get(self, request_id: str) -> ScheduledRequest:
+        return self._live[request_id]
+
+    def __contains__(self, request_id: str) -> bool:
+        return request_id in self._live
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    @property
+    def preemptive(self) -> bool:
+        return self.policy.preemptive
+
+    def set_now(self, now: float) -> None:
+        """Inject the current (sim or wall) time; time-varying policies
+        (aging) recompute every live priority."""
+        if not getattr(self.policy, "time_varying", False):
+            return
+        self.policy.now = now
+        for sr in self._live.values():
+            sr.priority = self.policy.priority(sr)
+
+    def order(self, request_ids=None) -> list[str]:
+        """Request ids sorted by priority (smaller first, arrival ties)."""
+        if request_ids is None:
+            srs = list(self._live.values())
+        else:
+            srs = [self._live[r] for r in request_ids]
+        srs.sort(key=lambda s: (s.priority, s.arrival))
+        return [s.request_id for s in srs]

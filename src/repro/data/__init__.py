@@ -1,0 +1,6 @@
+"""Data pipeline: tokenizer + synthetic dataset generators."""
+
+from .datasets import lm_batches, zipf_tokens
+from .tokenizer import ByteTokenizer
+
+__all__ = ["lm_batches", "zipf_tokens", "ByteTokenizer"]

@@ -1,0 +1,37 @@
+"""jit'd wrapper for the flash-decode kernel (ref fallback off-TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+from .ref import decode_attention_reference
+
+__all__ = ["decode_attention_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s",
+                                             "force_pallas"))
+def decode_attention_op(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                        block_s: int = 512, force_pallas: bool = False):
+    """q: (B, H, dh); caches (B, S_max, KV, dh); cache_len (B,)."""
+    native = jax.default_backend() == "tpu"
+    if not native and not force_pallas:
+        return decode_attention_reference(q, k_cache, v_cache, cache_len,
+                                          window=window)
+    s_max = k_cache.shape[1]
+    blk = min(block_s, s_max)
+    pad = (-s_max) % blk
+    if pad and window > 0:
+        raise ValueError("ring-buffer (window) caches must be a multiple of "
+                         "block_s — padding would corrupt wrap masking")
+    if pad:
+        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, cfg)
+        v_cache = jnp.pad(v_cache, cfg)
+    return decode_attention_kernel(
+        q, k_cache, v_cache, cache_len.astype(jnp.int32),
+        window=window, block_s=blk, interpret=not native)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_reference"]
+
+
+def decode_attention_reference(q, k_cache, v_cache, cache_len, *,
+                               window: int = 0):
+    """q: (B, H, dh); k_cache/v_cache: (B, S_max, KV, dh); cache_len: (B,).
+    Returns (B, H, dh)."""
+    b, h, dh = q.shape
+    s_max, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k_cache, rep, axis=2)            # (B, S, H, dh)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh ** -0.5
+    idx = jnp.arange(s_max)
+    valid = idx[None, :] < cache_len[:, None]
+    if window > 0:
+        valid = valid | (cache_len[:, None] >= s_max)
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,117 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv_blocks innermost, so the
+online-softmax running state (m, l, acc) lives in VMEM scratch and
+persists across the sequential TPU grid steps.  Block shapes are
+MXU-aligned (multiples of 128 on the sequence dims; head_dim is the lane
+dim).  GQA is handled in the BlockSpec index maps: the K/V operands keep
+their (B*KV, S, dh) layout and each query head reads its group's KV head —
+no materialized head repetition in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, n_kv_blocks: int,
+            seq_len: int, causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, dh)
+    k = k_ref[0]                                   # (bk, dh)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len                         # padding
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           seq_len: int | None = None,
+                           interpret: bool = False):
+    """q: (BH, S, dh); k, v: (BKV, S, dh) with BH = BKV * rep, B-major.
+
+    The caller pads S to a multiple of the block sizes.
+    """
+    bh, s, dh = q.shape
+    bkv = k.shape[0]
+    rep = bh // bkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    n_q, n_k = s // block_q, s // block_k
+    scale = dh ** -0.5
+    seq_len = s if seq_len is None else seq_len  # mask padded keys
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    # GQA without materialized repetition: ops.py lays q out as
+    # (B*KV*rep, S, dh) grouped by kv head, so operand index = h // rep.
+    def kv_map_grouped(h, qi, ki):
+        return (h // rep, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv_blocks=n_k, seq_len=seq_len, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), q_map),
+            pl.BlockSpec((1, block_k, dh), kv_map_grouped),
+            pl.BlockSpec((1, block_k, dh), kv_map_grouped),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""jit'd wrapper for the flash-attention kernel.
+
+Layout contract with kernel.py: q heads are grouped by KV head so the
+BlockSpec GQA index map is a plain ``h // rep``.  On non-TPU backends the
+kernel runs in interpret mode (or falls back to the reference when
+``interpret=False`` is forced off); shapes are padded to block multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import attention_reference
+
+__all__ = ["flash_attention"]
+
+
+def _use_pallas_native() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "force_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    force_pallas: bool = False):
+    """q: (B, S, H, dh); k, v: (B, S, KV, dh) -> (B, S, H, dh).
+
+    TPU: native Pallas.  CPU: interpret-mode Pallas when force_pallas
+    (kernel validation), else the jnp reference.
+    """
+    native = _use_pallas_native()
+    if not native and not force_pallas:
+        return attention_reference(q, k, v, causal=causal, window=window)
+
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    blk = max(block_q, block_k)
+    pad = (-s) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    # (B, S, H, dh) -> (B, KV, rep, S, dh) -> (B*KV*rep, S, dh)
+    qk = q.transpose(0, 2, 1, 3).reshape(b, kv, rep, sp, dh)
+    qk = qk.reshape(b * kv * rep, sp, dh)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kv, sp, dh)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * kv, sp, dh)
+    out = flash_attention_kernel(
+        qk, kk, vk, causal=causal, window=window, seq_len=s,
+        block_q=block_q, block_k=block_k, interpret=not native)
+    out = out.reshape(b, kv, rep, sp, dh).reshape(b, h, sp, dh)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :s] if pad else out

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive softmax attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_reference"]
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, H, dh); k, v: (B, S, KV, dh). Returns (B, S, H, dh)."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh ** -0.5
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i >= j
+    if window > 0:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the batched Gittins kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import gittins_kernel
+from .ref import gittins_reference
+
+__all__ = ["gittins_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "force_pallas"))
+def gittins_op(support, probs, *, block_n: int = 256,
+               force_pallas: bool = False):
+    native = jax.default_backend() == "tpu"
+    if not native and not force_pallas:
+        return gittins_reference(support, probs)
+    return gittins_kernel(support, probs, block_n=block_n,
+                          interpret=not native)

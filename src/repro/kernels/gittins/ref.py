@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the batched Gittins kernel (mirrors
+repro.core.gittins.gittins_index_batch, the numpy ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gittins_reference"]
+
+
+def gittins_reference(support, probs):
+    """support/probs: (n, k) -> (n,) Gittins indices."""
+    c = support.astype(jnp.float32)
+    p = probs.astype(jnp.float32)
+    mass = jnp.cumsum(p, axis=1)
+    spent = jnp.cumsum(c * p, axis=1)
+    num = spent + c * (1.0 - mass)
+    ratio = jnp.where(mass > 1e-12, num / jnp.maximum(mass, 1e-12), jnp.inf)
+    return ratio.min(axis=1)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch, n_chunks) — chunks innermost so the (H, P, N) inter-chunk
+state lives in VMEM scratch and is carried across sequential grid steps.
+Within a chunk everything is matmuls (MXU): the quadratic intra-chunk
+term, the state read-out, and the state update — the state-space-duality
+insight mapped directly onto TPU tiling (DESIGN.md hardware adaptation:
+this replaces the CUDA kernel's warp-level parallel scan with a
+chunked-matmul formulation, which is how SSD is *meant* to run on matrix
+units).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)       # (q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)     # (q, H)
+    a = a_ref[0].astype(jnp.float32)       # (q, H)
+    bm = b_ref[0].astype(jnp.float32)      # (q, N)
+    cm = c_ref[0].astype(jnp.float32)      # (q, N)
+    q = chunk
+
+    la = jnp.log(jnp.maximum(a, 1e-20))    # (q, H)
+    cum = jnp.cumsum(la, axis=0)           # (q, H)
+    seg = cum[:, None, :] - cum[None, :, :]            # (q, q, H)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(causal[:, :, None], jnp.exp(seg), 0.0)   # (q,q,H)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (q,q)
+    w = scores[:, :, None] * lmat                       # (q, q, H)
+    xdt = x * dt[:, :, None]                            # (q, H, P)
+    # y_intra[i,h,p] = sum_j w[i,j,h] * xdt[j,h,p]
+    y_intra = jnp.einsum("ijh,jhp->ihp", w, xdt)
+    # carried-in state contribution
+    state = state_scr[...]                              # (H, P, N)
+    decay_in = jnp.exp(cum)                             # (q, H)
+    y_inter = jnp.einsum("in,hpn,ih->ihp", cm, state, decay_in)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update
+    decay_out = jnp.exp(cum[-1:, :] - cum)              # (q, H)
+    dstate = jnp.einsum("jn,jhp,jh->hpn", bm, xdt, decay_out)
+    total = jnp.exp(cum[-1, :])                         # (H,)
+    state_scr[...] = state * total[:, None, None] + dstate
+
+
+def ssd_scan_kernel(x, dt, a_decay, bmat, cmat, *, chunk: int = 256,
+                    interpret: bool = False):
+    """x: (B, S, H, P); dt, a_decay: (B, S, H); bmat/cmat: (B, S, N).
+    S must be a multiple of ``chunk``.  Returns y: (B, S, H, P)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_decay, bmat, cmat)

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the SSD scan kernel (ref fallback off-TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+from .ref import ssd_reference
+
+__all__ = ["ssd_scan_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force_pallas"))
+def ssd_scan_op(x, dt, a_decay, bmat, cmat, *, chunk: int = 256,
+                force_pallas: bool = False):
+    native = jax.default_backend() == "tpu"
+    if not native and not force_pallas:
+        return ssd_reference(x, dt, a_decay, bmat, cmat)
+    s = x.shape[1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_decay = jnp.pad(a_decay, ((0, 0), (0, pad), (0, 0)),
+                          constant_values=1.0)
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_kernel(x, dt, a_decay, bmat, cmat, chunk=q,
+                        interpret=not native)
+    return y[:, :s] if pad else y

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD scan: the naive sequential recurrence.
+
+Deliberately a *different algorithm* than the chunked kernel (step-by-step
+state recurrence vs chunked matmul duality) so agreement validates the
+math, not just the transcription.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_reference"]
+
+
+def ssd_reference(x, dt, a_decay, bmat, cmat):
+    """x: (B,S,H,P); dt/a_decay: (B,S,H); bmat/cmat: (B,S,N) -> (B,S,H,P)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, xs):
+        xt, dtt, at, bt, ct = xs
+        xdt = xt.astype(jnp.float32) * dtt.astype(jnp.float32)[..., None]
+        outer = jnp.einsum("bhp,bn->bhpn", xdt, bt.astype(jnp.float32))
+        state = state * at.astype(jnp.float32)[..., None, None] + outer
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(a_decay, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

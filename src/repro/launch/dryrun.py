@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory analysis, cost analysis, and
+roofline terms.  MUST be run as its own process (the XLA_FLAGS lines above
+execute before any jax import — 512 placeholder host devices).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPE_IDS, get_config, get_shape  # noqa: E402
+from ..models import build_model             # noqa: E402
+from ..models.layers import shapes_from_template  # noqa: E402
+from ..sharding import (activation_sharding, batch_axes, kv_cache_spec,  # noqa: E402
+                        logits_spec, resolve_specs, rules_for,
+                        ssm_state_spec)
+from ..training.optimizer import AdamW, AdamWState  # noqa: E402
+from ..training.train_loop import make_train_step   # noqa: E402
+from .mesh import make_production_mesh       # noqa: E402
+from .roofline import (HW, analytic_floors, collective_bytes,  # noqa: E402
+                        model_flops, roofline_terms)  # noqa: E402
+
+SKIPS = {
+    # (arch, shape): reason — documented in DESIGN.md Sec. 5
+    ("seamless-m4t-medium", "long_500k"):
+        "enc-dec with full cross-attention has no sub-quadratic 500k path",
+}
+
+
+def serve_mode(cfg) -> str:
+    """'serve' or 'serve_big' (2-D weight storage) by per-chip weight size."""
+    per_dev = cfg.param_count() * 2 / cfg.model_parallel
+    return "serve_big" if per_dev > 10e9 else "serve"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStructs + PartitionSpecs for the step inputs (no alloc)."""
+    B, S = shape.global_batch, shape.seq_len
+    b_ax = batch_axes(mesh, B)
+    D = cfg.d_model
+    batch, specs = {}, {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            se = S // 2
+            batch["frames"] = _sds((B, se, D), jnp.bfloat16)
+            batch["tokens"] = _sds((B, S - se), jnp.int32)
+            specs["frames"] = P(b_ax, None, None)
+            specs["tokens"] = P(b_ax, None)
+        elif cfg.family == "vlm":
+            pt = min(cfg.n_frontend_tokens, S // 2)
+            batch["patches"] = _sds((B, pt, D), jnp.bfloat16)
+            batch["tokens"] = _sds((B, S - pt), jnp.int32)
+            specs["patches"] = P(b_ax, None, None)
+            specs["tokens"] = P(b_ax, None)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            specs["tokens"] = P(b_ax, None)
+        if shape.kind == "train":
+            batch["labels"] = _sds(batch["tokens"].shape, jnp.int32)
+            specs["labels"] = P(b_ax, None)
+    return batch, specs
+
+
+def cache_specs(cfg, model, shape, mesh, mode):
+    """Decode-cache ShapeDtypeStructs + PartitionSpecs."""
+    B, S = shape.global_batch, shape.seq_len
+    s_max = cfg.window if cfg.attention_kind == "sliding_window" else S
+    enc_len = min(cfg.n_frontend_tokens or 4096, 4096)
+    shapes = model.cache_shapes(B, s_max, enc_len=enc_len)
+    kv_spec = kv_cache_spec(cfg, mode, mesh, B)
+    specs = {}
+    for name in shapes:
+        if name in ("k", "v", "cross_k", "cross_v"):
+            specs[name] = kv_spec
+        elif name == "ssm":
+            specs[name] = ssm_state_spec(cfg, mode, mesh, B)
+    return shapes, specs
+
+
+def build_case(arch: str, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings, meta)."""
+    shape = get_shape(shape_name)
+    long_ctx = shape_name == "long_500k"
+    cfg = get_config(arch, long_context=long_ctx)
+    model = build_model(cfg)
+    mode = "train" if shape.kind == "train" else serve_mode(cfg)
+    rules = rules_for(cfg, mode, mesh)
+    param_specs = resolve_specs(model.param_specs(), rules)
+    param_shapes = shapes_from_template(model.template())
+    batch_shapes, batch_pspecs = input_specs(cfg, shape, mesh)
+    b_ax = batch_axes(mesh, shape.global_batch)
+
+    def ns(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        opt = AdamW(moment_dtype=cfg.moment_dtype)
+        step = make_train_step(model, opt)
+        opt_shapes = AdamWState(
+            count=_sds((), jnp.int32),
+            m=jax.tree.map(lambda s: _sds(s.shape, jnp.dtype(cfg.moment_dtype)),
+                           param_shapes),
+            v=jax.tree.map(lambda s: _sds(s.shape, jnp.dtype(cfg.moment_dtype)),
+                           param_shapes))
+        opt_specs = AdamWState(count=P(), m=param_specs, v=param_specs)
+        in_sh = (ns(param_specs), ns(opt_specs), ns(batch_pspecs))
+        out_sh = (ns(param_specs), ns(opt_specs),
+                  ns({"loss": P(), "lm_loss": P(), "aux_loss": P()}))
+        args = (param_shapes, opt_shapes, batch_shapes)
+        return step, args, in_sh, out_sh, dict(cfg=cfg, mode=mode,
+                                               donate=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+        csh, csp = cache_specs(cfg, model, shape, mesh, mode)
+        # prefill returns cache sized by actual sequence; rebuild spec tree
+        in_sh = (ns(param_specs), ns(batch_pspecs))
+        out_sh = (ns(logits_spec(mesh, mode, shape.global_batch)), ns(csp))
+        args = (param_shapes, batch_shapes)
+        return prefill, args, in_sh, out_sh, dict(cfg=cfg, mode=mode,
+                                                  donate=())
+
+    # decode
+    def decode(params, token, cache, cache_len):
+        return model.decode_step(params, token, cache, cache_len)
+    csh, csp = cache_specs(cfg, model, shape, mesh, mode)
+    B = shape.global_batch
+    token = _sds((B, 1), jnp.int32)
+    cache_len = _sds((B,), jnp.int32)
+    in_sh = (ns(param_specs), ns(P(b_ax, None)), ns(csp), ns(P(b_ax)))
+    out_sh = (ns(logits_spec(mesh, mode, B)), ns(csp))
+    args = (param_shapes, token, csh, cache_len)
+    return decode, args, in_sh, out_sh, dict(cfg=cfg, mode=mode, donate=(2,))
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             check_fit: bool = False) -> dict:
+    t0 = time.time()
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    fn, args, in_sh, out_sh, meta = build_case(arch, shape_name, mesh)
+    cfg, mode = meta["cfg"], meta["mode"]
+    shape = get_shape(shape_name)
+
+    act_spec, heads_spec, inner_spec, state_spec = None, None, None, None
+    expert_spec = NamedSharding(mesh, P("model", None, None))
+    if mode == "train":
+        # Megatron-style sequence parallelism on the residual stream:
+        # bounds the per-device rematerialized activation memory.  The
+        # heads constraint prevents involuntary full-replication reshards
+        # in the QKV backward under 2-D weight sharding (§Perf).
+        b_ax = batch_axes(mesh, None)
+        act_spec = NamedSharding(mesh, P(b_ax, "model", None))
+        heads_spec = NamedSharding(mesh, P(b_ax, None, "model", None))
+        inner_spec = NamedSharding(mesh, P(b_ax, None, "model"))
+        state_spec = NamedSharding(mesh, P(b_ax, "model", None, None))
+    with mesh:
+        ctx = activation_sharding(act_spec, heads_spec, inner_spec,
+                                  state_spec, expert_spec)
+        with ctx:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=meta["donate"])
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    floors = analytic_floors(cfg, shape, n_chips)
+    terms = roofline_terms(max(flops, floors["flops_floor"]),
+                           max(bytes_acc, floors["bytes_floor"]),
+                           max(coll["total"], floors["collective_floor"]))
+    mf = model_flops(cfg, shape, n_chips)
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mode": mode, "status": "ok",
+        "n_chips": n_chips,
+        "flops_per_chip": max(flops, floors["flops_floor"]),
+        "bytes_per_chip": max(bytes_acc, floors["bytes_floor"]),
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "analytic_floors": floors,
+        "collective_bytes_per_chip": max(coll["total"],
+                                         floors["collective_floor"]),
+        "hlo_collective_bytes_per_chip": coll["total"],
+        "collective_breakdown": {k: v for k, v in coll.items()
+                                 if k not in ("total", "counts")},
+        "collective_counts": coll["counts"],
+        "roofline": terms,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": (mf / max(flops, floors["flops_floor"]))
+            if flops else None,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "output_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)
+                           - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "fits_hbm": None,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    rec["fits_hbm"] = bool(rec["memory"]["peak_bytes"] <= HW["hbm_bytes"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=SHAPE_IDS)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape x mesh)")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def key(a, s, mp):
+        return f"{a}|{s}|{'multi' if mp else 'single'}"
+
+    cases = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPE_IDS:
+                cases.append((a, s, False))
+                if not args.single_pod_only:
+                    cases.append((a, s, True))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cases.append((args.arch, args.shape, args.multi_pod))
+
+    for a, s, mp in cases:
+        k = key(a, s, mp)
+        if k in results and results[k].get("status") in ("ok", "skipped"):
+            print(f"[cached] {k}")
+            continue
+        print(f"[dryrun] {k} ...", flush=True)
+        try:
+            rec = run_case(a, s, mp)
+        except Exception as e:  # record failures — they are bugs to fix
+            rec = {"arch": a, "shape": s, "multi_pod": mp,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results[k] = rec
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  ok: dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+                  f"collective={r['collective_s']:.2e}s "
+                  f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                  f"fits={rec['fits_hbm']} ({rec['compile_s']}s)", flush=True)
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                  flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

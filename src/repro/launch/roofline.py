@@ -1,0 +1,159 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (per-step):
+
+    compute    = HLO_FLOPs_per_chip / (mfu_peak)        [197 TF/s bf16]
+    memory     = HLO_bytes_per_chip / HBM_bw            [819 GB/s]
+    collective = collective_bytes_per_chip / link_bw    [~50 GB/s ICI]
+
+``compiled.cost_analysis()`` reports per-partition FLOPs/bytes (the SPMD
+module is per-device).  Collective bytes are not in cost_analysis: we
+parse the optimized HLO and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(post-partitioning shapes are per-device, so the sum approximates bytes
+moved per chip; all-reduce is counted twice — reduce-scatter+all-gather).
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,      # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,           # bytes/s / chip
+    "hbm_bytes": 16 * 2**30,   # per chip
+    "link_bw": 50e9,           # bytes/s / chip ICI
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-op byte totals from optimized (per-device) HLO."""
+    out = {op: 0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition("=")
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+", lhs)
+        if m is None:
+            continue
+        opm = re.match(r"\s*(?:\([^)]*\)|[\w\[\],{}:#\s]*?)\s*"
+                       r"(all-gather|all-reduce|reduce-scatter|all-to-all"
+                       r"|collective-permute)(?:-start)?\(", rhs)
+        if opm is None:
+            continue
+        op = opm.group(1)
+        # result shapes are on the RHS before the op name
+        seg = rhs[: opm.end()]
+        b = _shape_bytes(seg)
+        if op == "all-reduce":
+            b *= 2  # RS + AG equivalent traffic
+        out[op] += b
+        counts[op] += 1
+    out["total"] = sum(out[o] for o in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float, hw: dict = HW) -> dict:
+    compute = flops_per_chip / hw["peak_flops"]
+    memory = bytes_per_chip / hw["hbm_bw"]
+    collective = coll_bytes_per_chip / hw["link_bw"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    return terms
+
+
+def analytic_floors(cfg, shape, n_chips: int) -> dict:
+    """Analytic lower bounds on per-chip FLOPs and HBM bytes per step.
+
+    XLA's cost_analysis counts a while-loop body ONCE, so scan-over-layers
+    models under-report by ~n_layers (x grad_accum for training).  These
+    closed-form floors (2ND inference / 6ND training FLOPs; one weight
+    read + KV traffic for memory) recover the true scale; the reported
+    roofline terms take max(HLO, floor).  Collective terms keep the HLO
+    value and are flagged as per-loop-body lower bounds in EXPERIMENTS.md.
+    """
+    n_active = cfg.active_param_count()
+    param_bytes = cfg.param_count() * 2  # bf16
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family in ("ssm", "hybrid"):
+        kv_bpt = 0.0
+    else:
+        kv_bpt = (cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+    mp = max(1, cfg.model_parallel)
+    data_par = max(1, n_chips // mp)
+    coll = 0.0
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        # fwd + bwd weight reads + grad write + opt read/write (bf16-ish)
+        mem = 4.0 * param_bytes * max(1, cfg.grad_accum) \
+            + 2.0 * tokens * kv_bpt
+        # collective floor: FSDP per-layer weight gathers (fwd+bwd, per
+        # microbatch) + gradient reduce-scatter/all-gather
+        if cfg.fsdp:
+            coll += (2.0 * max(1, cfg.grad_accum) * param_bytes / mp
+                     * (1.0 - 1.0 / data_par))
+        coll += 2.0 * param_bytes / mp * (1.0 - 1.0 / data_par)  # grad AR
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens \
+            + 2.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * B * S * S
+        mem = param_bytes + tokens * kv_bpt
+        # TP: one activation all-gather + one reduce per layer (per chip)
+        coll += 2.0 * cfg.n_layers * (tokens / data_par) * cfg.d_model * 2
+    else:  # decode: one token per sequence over the full cache
+        s_cache = (cfg.window if cfg.attention_kind == "sliding_window"
+                   else S)
+        flops = 2.0 * n_active * B \
+            + 2.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * B * s_cache
+        mem = param_bytes + B * s_cache * kv_bpt
+        coll += 2.0 * cfg.n_layers * (B / data_par) * cfg.d_model * 2
+    return {"flops_floor": flops / n_chips, "bytes_floor": mem / n_chips,
+            "collective_floor": coll}
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful model FLOPs per step per chip: 6*N*D train, 2*N*D inference
+    (N = active params for MoE)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_active * tokens / n_chips

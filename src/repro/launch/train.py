@@ -1,0 +1,65 @@
+"""Training launcher: sharded train loop on the local mesh (reduced
+config on CPU; the production-mesh path is exercised by dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config
+from ..data import lm_batches
+from ..models import build_model
+from ..sharding import resolve_specs, rules_for
+from ..training import (AdamW, make_lr_schedule, make_train_step,
+                        save_checkpoint)
+from .mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    model = build_model(cfg)
+    mesh = make_local_mesh()
+    rules = rules_for(cfg, "train", mesh)
+    pspecs = resolve_specs(model.param_specs(), rules)
+    ns = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                      is_leaf=lambda x: isinstance(x, P))
+    params = jax.device_put(model.init(jax.random.PRNGKey(0)), ns)
+    opt = AdamW(learning_rate=args.lr, moment_dtype=cfg.moment_dtype)
+    state = opt.init(params)
+    sched = make_lr_schedule(warmup=max(2, args.steps // 10),
+                             total=args.steps)
+    data = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+    with mesh:
+        step_fn = jax.jit(make_train_step(model, opt, sched))
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            params, state, metrics = step_fn(params, state, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                      f"({(time.time() - t0) / (step + 1):.2f}s/step)",
+                      flush=True)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, state, step=args.steps)
+        print("checkpoint ->", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""JAX model zoo: every assigned architecture family."""
+
+from .config import FAMILIES, ModelConfig
+from .model import Model, build_model
+
+__all__ = ["FAMILIES", "ModelConfig", "Model", "build_model"]

@@ -1,0 +1,134 @@
+"""Attention: chunked causal (flash-style reference), sliding window, and
+single-token decode over a KV cache.
+
+The chunked implementation is the pure-jnp twin of the Pallas flash kernel
+(repro.kernels.flash_attention): online softmax over KV blocks, so peak
+memory is O(S * block) instead of O(S^2) — this is what the dry-run
+compiles, keeping 32k-prefill activation memory sane.  On TPU the Pallas
+kernel replaces it via repro.kernels.flash_attention.ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention", "decode_attention", "encoder_attention"]
+
+_NEG = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B,S,KV,dh) -> (B,S,KV*n_rep,dh) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)
+                            ).reshape(b, s, kv * n_rep, dh)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                  block: int = 512, positions=None, kv_positions=None):
+    """Chunked multi-head (self or cross) attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh) with H % KV == 0.
+    window > 0 enables sliding-window causal masking.
+    Returns (B, Sq, H, dh).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = dh ** -0.5
+    if positions is None:
+        positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = positions if sk == sq else jnp.arange(sk)
+    q_pos = positions            # (Sq,)
+
+    blk = min(block, sk)
+    n_blocks = -(-sk // blk)
+    pad = n_blocks * blk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kt = k.reshape(b, n_blocks, blk, h, dh)
+    vt = v.reshape(b, n_blocks, blk, h, dh)
+    k_pos = jnp.pad(kv_positions, (0, pad), constant_values=-(10 ** 9)
+                    ).reshape(n_blocks, blk)
+
+    def step(carry, xs):
+        m, l, acc = carry            # (B,Sq,H), (B,Sq,H), (B,Sq,H,dh)
+        kb, vb, kp = xs              # (B,blk,H,dh), (B,blk,H,dh), (blk,)
+        scores = jnp.einsum("bshd,bthd->bsth", q, kb).astype(jnp.float32)
+        scores = scores * scale      # (B,Sq,blk,H)
+        mask = jnp.ones((sq, blk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kp[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - kp[None, :] < window
+        mask &= kp[None, :] >= 0     # padding
+        scores = jnp.where(mask[None, :, :, None], scores, _NEG)
+        m_new = jnp.maximum(m, scores.max(axis=2))
+        p = jnp.exp(scores - m_new[:, :, None, :])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=2)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bsth,bthd->bshd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kt, 1, 0), jnp.moveaxis(vt, 1, 0), k_pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def encoder_attention(q, k, v, *, kv_mask=None):
+    """Bidirectional (encoder / cross) attention — chunked (flash-style).
+
+    q: (B,Sq,H,dh); k,v: (B,Sk,KV,dh).  kv_mask (B,Sk) is not supported in
+    the chunked path; padding is handled by the caller's kv_positions.
+    """
+    assert kv_mask is None, "use kv_positions-based masking"
+    return gqa_attention(q, k, v, causal=False)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """One-token decode attention over a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, dh); k_cache/v_cache: (B, S_max, KV, dh);
+    cache_len: (B,) number of valid tokens (for ring buffers, the write
+    cursor — all S_max slots valid once wrapped).
+    Returns (B, 1, H, dh).
+
+    The softmax reduction runs over the cache-sequence axis; when that axis
+    is sharded (MQA/low-KV models shard S over 'model'), GSPMD inserts the
+    partial-max/sum all-reduces — the LSE-combine flash-decode pattern.
+    """
+    b, s_max, kvh, dh = k_cache.shape
+    h = q.shape[2]
+    rep = h // kvh
+    scale = dh ** -0.5
+    # grouped-head contraction — no materialized KV head repetition (a
+    # (B,S,H,dh) broadcast of the cache would be GSPMD-resharded at full
+    # size; measured collective-bound decode before this, §Perf).
+    qg = q.reshape(b, 1, kvh, rep, dh)
+    # bf16 reads + f32 accumulation (flash-decode numerics): casting the
+    # cache to f32 doubles its HBM traffic for nothing (§Perf A.2)
+    scores = jnp.einsum("bqkrd,bskd->bqkrs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(s_max)
+    valid = idx[None, :] < cache_len[:, None]            # (B, S_max)
+    if window > 0:
+        # ring buffer: every slot holds one of the last `window` tokens
+        valid = valid | (cache_len[:, None] >= s_max)
+    scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

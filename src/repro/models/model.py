@@ -1,0 +1,103 @@
+"""Model facade: one object per architecture with a uniform API.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, aux = model.loss_fn(params, batch)              # training
+    logits, cache = model.prefill(params, batch)          # serving prefill
+    logits, cache = model.decode_step(params, tok, cache, cache_len)
+
+Batches are dicts:
+    decoder LMs:  {"tokens": (B,S), "labels": (B,S)}
+    VLM:          + {"patches": (B,P,D)}   (stubbed frontend embeddings)
+    audio encdec: {"frames": (B,S_enc,D), "tokens": (B,S_dec), "labels": ...}
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .encdec import (encdec_cache_shapes, encdec_decode_step, encdec_forward,
+                     encdec_template)
+from .layers import init_from_template, specs_from_template
+from .transformer import (decoder_decode_step, decoder_forward,
+                          decoder_template, init_cache_shapes, lm_loss)
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+
+    def template(self):
+        if self.cfg.family == "encdec":
+            return encdec_template(self.cfg)
+        return decoder_template(self.cfg)
+
+    def init(self, key):
+        return init_from_template(self.template(), key)
+
+    def param_specs(self):
+        return specs_from_template(self.template())
+
+    # ------------------------------------------------------------ forward
+
+    def forward(self, params, batch, *, collect_cache=False, remat=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_forward(params, cfg, batch["frames"],
+                                  batch["tokens"],
+                                  collect_cache=collect_cache, remat=remat)
+        fe = batch.get("patches") if cfg.family == "vlm" else None
+        return decoder_forward(params, cfg, batch["tokens"],
+                               frontend_embeds=fe,
+                               collect_cache=collect_cache, remat=remat)
+
+    def loss_fn(self, params, batch, remat=None):
+        """Scalar LM loss (+ router aux)."""
+        logits, _, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm" and "patches" in batch:
+            logits = logits[:, batch["patches"].shape[1]:]
+        # next-token shift
+        loss = lm_loss(logits[:, :-1], labels[:, 1:],
+                       batch.get("loss_mask"))
+        return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+    # ------------------------------------------------------------ serving
+
+    def prefill(self, params, batch):
+        """Returns (last-position logits (B,V), cache dict)."""
+        logits, cache, _ = self.forward(params, batch, collect_cache=True,
+                                        remat=False)
+        return logits[:, -1, :], cache
+
+    def decode_step(self, params, token, cache, cache_len):
+        """token: (B,1); cache_len: (B,). Returns ((B,V) logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, cache = encdec_decode_step(params, cfg, token, cache,
+                                               cache_len)
+        else:
+            logits, cache = decoder_decode_step(params, cfg, token, cache,
+                                                cache_len)
+        return logits[:, -1, :], cache
+
+    def cache_shapes(self, batch: int, max_len: int, enc_len: int = 0):
+        if self.cfg.family == "encdec":
+            return encdec_cache_shapes(self.cfg, batch, max_len, enc_len)
+        return init_cache_shapes(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_len, enc_len))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with capacity-based dense dispatch.
+
+TPU adaptation (DESIGN.md): instead of NCCL all-to-all with ragged token
+routing (the GPU idiom), tokens are scatter-packed into a per-expert
+capacity buffer (E, C, D) and the expert FFNs run as one batched einsum —
+dense, MXU-friendly, and shardable over the 'model' axis (expert
+parallelism) with GSPMD inserting the (all-to-all-equivalent) collectives.
+Overflow beyond capacity is dropped (standard Switch/GShard semantics);
+the router carries the usual load-balance auxiliary loss.
+
+Supports DeepSeek-MoE fine-grained layout: shared experts (always-on)
++ routed experts with top-k normalized gates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain_expert_buf
+from .layers import ParamSpec, mlp, mlp_template
+
+__all__ = ["moe_template", "moe_ffn"]
+
+
+def moe_template(cfg, layers: int | None = None):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    L = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    gate = cfg.activation == "swiglu"
+    t = {
+        "router": ParamSpec(L + (D, E), jnp.float32, la + ("embed", "router")),
+        "w_in": ParamSpec(L + (E, D, F), jnp.bfloat16,
+                          la + ("expert", "embed", "expert_mlp")),
+        "w_out": ParamSpec(L + (E, F, D), jnp.bfloat16,
+                           la + ("expert", "expert_mlp", "embed")),
+    }
+    if gate:
+        t["w_gate"] = ParamSpec(L + (E, D, F), jnp.bfloat16,
+                                la + ("expert", "embed", "expert_mlp"))
+    if cfg.n_shared_experts > 0:
+        t["shared"] = mlp_template(D, cfg.n_shared_experts * F,
+                                   cfg.activation, layers)
+    return t
+
+
+def _expert_mlp(params, buf, activation: str):
+    """buf: (E, C, D) -> (E, C, D) through per-expert FFNs."""
+    h_in = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    if activation == "swiglu":
+        h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        h = jax.nn.silu(h_gate) * h_in
+    elif activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h_in))
+    else:
+        h = jax.nn.gelu(h_in)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+def moe_ffn(params, x, cfg, *, decode: bool = False):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
+
+    decode=True gives every assignment capacity (no token dropping):
+    decode batches are small and dropping at decode corrupts generation.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    N = B * S
+    if decode:
+        C = N * K
+    else:
+        C = min(N * K, max(1, int(N * K * cfg.capacity_factor / E)))
+
+    xf = x.reshape(N, D)
+    logits = (xf.astype(jnp.float32) @ params["router"])        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                      # (N, K)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) assignment within its expert's capacity
+    eflat = top_i.reshape(-1)                                   # (N*K,)
+    onehot = jax.nn.one_hot(eflat, E, dtype=jnp.int32)          # (N*K, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    pos = jnp.take_along_axis(ranks, eflat[:, None], axis=1)[:, 0]
+    keep = pos < C                                              # drop overflow
+
+    src = jnp.repeat(xf, K, axis=0)                             # (N*K, D)
+    safe_pos = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E, C, D), x.dtype).at[eflat, safe_pos].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype),
+        mode="drop")
+    buf = constrain_expert_buf(buf)
+
+    out_buf = constrain_expert_buf(
+        _expert_mlp(params, buf, cfg.activation))               # (E, C, D)
+
+    picked = out_buf[eflat, safe_pos]                           # (N*K, D)
+    w = (gates.reshape(-1) * keep).astype(picked.dtype)
+    out = (picked * w[:, None]).reshape(N, K, D).sum(axis=1)
+
+    if cfg.n_shared_experts > 0:
+        out = out + mlp(params["shared"], xf, cfg.activation)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs) * cfg.router_aux_weight
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,190 @@
+"""Mamba2 SSD (state-space duality) block.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within a chunk the recurrence is computed quadratically with matmuls
+(MXU-friendly), across chunks a compact (H, P, N) state is carried by a
+scan — O(S) work, constant decode state.  The chunked form here is the
+pure-jnp oracle of the Pallas kernel in repro.kernels.ssd_scan.
+
+Shapes: x (B,S,H,P) with H = d_inner/P heads, B/C projections shared
+across heads (n_groups=1), per-head scalar decay a_t = exp(dt_t * -exp(A_log)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain_inner, constrain_ssm_state
+from .layers import ParamSpec
+
+__all__ = ["ssm_template", "ssd_chunked", "ssd_decode_step", "mamba2_block",
+           "mamba2_decode_step", "ssm_state_shape"]
+
+
+def ssm_template(cfg, layers: int | None = None):
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    L = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    return {
+        "in_proj_x": ParamSpec(L + (D, DI), jnp.bfloat16,
+                               la + ("embed", "ssm_inner")),
+        "in_proj_z": ParamSpec(L + (D, DI), jnp.bfloat16,
+                               la + ("embed", "ssm_inner")),
+        "bc_proj": ParamSpec(L + (D, 2 * N), jnp.bfloat16,
+                             la + ("embed", None)),
+        "dt_proj": ParamSpec(L + (D, H), jnp.bfloat16, la + ("embed", None)),
+        "dt_bias": ParamSpec(L + (H,), jnp.float32, la + (None,), "zeros"),
+        "a_log": ParamSpec(L + (H,), jnp.float32, la + (None,), "ssm_a"),
+        "d_skip": ParamSpec(L + (H,), jnp.float32, la + (None,), "ones"),
+        "conv_w": ParamSpec(L + (cfg.conv_kernel, DI), jnp.float32,
+                            la + (None, "ssm_inner"), "normal"),
+        "out_proj": ParamSpec(L + (DI, D), jnp.bfloat16,
+                              la + ("ssm_inner", "embed")),
+    }
+
+
+def ssm_state_shape(cfg, batch: int):
+    """Recurrent state (B, H, P, N) + conv tail (B, K-1, DI)."""
+    return {
+        "ssd": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        "conv": (batch, cfg.conv_kernel - 1, cfg.d_inner),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv1d. x: (B,S,DI); w: (K,DI); tail: (B,K-1,DI)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)    # (B,S+K-1,DI)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    new_tail = xp[:, -(k - 1):, :] if k > 1 else tail
+    return out, new_tail
+
+
+def ssd_chunked(x, dt, a_decay, Bmat, Cmat, init_state=None, chunk: int = 256):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) step sizes (post-softplus);
+    a_decay: (B,S,H) per-step decay in (0,1); Bmat/Cmat: (B,S,N).
+    Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    n = Bmat.shape[-1]
+    q = min(chunk, s)
+    n_chunks = -(-s // q)
+    pad = n_chunks * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_decay = jnp.pad(a_decay, ((0, 0), (0, pad), (0, 0)),
+                          constant_values=1.0)
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked views: (n_chunks, B, q, ...)
+    def chunkify(t):
+        return jnp.moveaxis(t.reshape(b, n_chunks, q, *t.shape[2:]), 1, 0)
+
+    xc, dtc, ac = chunkify(x), chunkify(dt), chunkify(a_decay)
+    Bc, Cc = chunkify(Bmat), chunkify(Cmat)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    init_state = constrain_ssm_state(init_state)
+
+    def chunk_step(state, xs):
+        xq, dtq, aq, bq, cq = xs
+        # log-decay prefix sums within the chunk
+        la = jnp.log(jnp.maximum(aq.astype(jnp.float32), 1e-20))  # (B,q,H)
+        cum = jnp.cumsum(la, axis=1)                              # (B,q,H)
+        # intra-chunk quadratic term: L[i,j] = prod_{j<k<=i} a_k (causal)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]             # (B,q,q,H)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))               # (B,q,q)
+        w = scores[..., None] * Lmat                              # (B,q,q,H)
+        xdt = xq.astype(jnp.float32) * dtq.astype(jnp.float32)[..., None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+        # contribution of the carried-in state
+        decay_in = jnp.exp(cum)                                   # (B,q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp",
+                             cq.astype(jnp.float32), state, decay_in)
+        # state update: decay over whole chunk + weighted outer products
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)                 # (B,q,H)
+        dstate = jnp.einsum("bjn,bjhp,bjh->bhpn",
+                            bq.astype(jnp.float32), xdt, decay_out)
+        total = jnp.exp(cum[:, -1, :])                            # (B,H)
+        new_state = state * total[:, :, None, None] + dstate
+        return constrain_ssm_state(new_state), y_intra + y_inter
+
+    # checkpoint each chunk: the backward otherwise saves the (B,q,q,H)
+    # decay/score temporaries of EVERY chunk (~8.6 GiB/layer on zamba2
+    # train_4k, EXPERIMENTS.md §Perf B) — recomputing them is cheap matmuls
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_step), init_state,
+                                   (xc, dtc, ac, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n_chunks * q, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, a_decay, Bvec, Cvec):
+    """One recurrent step. state: (B,H,P,N); x: (B,H,P); dt,a: (B,H);
+    Bvec/Cvec: (B,N).  Returns (y (B,H,P), new_state)."""
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    outer = jnp.einsum("bhp,bn->bhpn", xdt, Bvec.astype(jnp.float32))
+    new_state = state * a_decay[..., None, None] + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cvec.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_block(params, u, cfg, state=None):
+    """Full Mamba2 block over a sequence. u: (B,S,D).
+    Returns (out (B,S,D), new_state dict)."""
+    b, s, d = u.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = constrain_inner(
+        jnp.einsum("bsd,df->bsf", u, params["in_proj_x"]))     # (B,S,DI)
+    z = constrain_inner(jnp.einsum("bsd,df->bsf", u, params["in_proj_z"]))
+    conv_tail = None if state is None else state["conv"]
+    xc, new_tail = _causal_conv(xin, params["conv_w"], conv_tail)
+    xc = jax.nn.silu(xc)
+    bc = jnp.einsum("bsd,dn->bsn", u, params["bc_proj"])       # (B,S,2N)
+    Bmat, Cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])
+    a_decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B,S,H)
+    x_heads = xc.reshape(b, s, h, p)
+    init = None if state is None else state["ssd"]
+    y, final = ssd_chunked(x_heads, dt, a_decay, Bmat, Cmat,
+                           init_state=init, chunk=cfg.ssm_chunk)
+    y = y + x_heads * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = (y.reshape(b, s, h * p) * jax.nn.silu(z))
+    out = jnp.einsum("bsf,fd->bsd", y, params["out_proj"])
+    return out, {"ssd": final, "conv": new_tail}
+
+
+def mamba2_decode_step(params, u, cfg, state):
+    """One-token decode. u: (B,1,D); state from ssm_state_shape."""
+    b = u.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = jnp.einsum("bsd,df->bsf", u, params["in_proj_x"])    # (B,1,DI)
+    z = jnp.einsum("bsd,df->bsf", u, params["in_proj_z"])
+    xc, new_tail = _causal_conv(xin, params["conv_w"], state["conv"])
+    xc = jax.nn.silu(xc)[:, 0]                                 # (B,DI)
+    bc = jnp.einsum("bsd,dn->bsn", u, params["bc_proj"])[:, 0]
+    Bvec, Cvec = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, params["dt_proj"]
+                   ).astype(jnp.float32)[:, 0] + params["dt_bias"])
+    a_decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B,H)
+    x_heads = xc.reshape(b, h, p)
+    y, new_ssd = ssd_decode_step(state["ssd"], x_heads, dt, a_decay,
+                                 Bvec, Cvec)
+    y = y + x_heads * params["d_skip"][None, :, None].astype(y.dtype)
+    y = (y.reshape(b, 1, h * p) * jax.nn.silu(z))
+    out = jnp.einsum("bsf,fd->bsd", y, params["out_proj"])
+    return out, {"ssd": new_ssd, "conv": new_tail}

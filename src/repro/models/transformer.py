@@ -1,0 +1,369 @@
+"""Decoder-only transformer assembly: dense GQA, MoE, Mamba2 SSD, hybrid,
+and VLM (frontend-embedding) variants — one code path per family, all with
+scan-over-layers (+ optional remat) so 96-layer configs lower to compact
+HLO for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain_activations, constrain_heads
+from .attention import decode_attention, gqa_attention
+from .config import ModelConfig
+from .layers import (ParamSpec, apply_rope, attention_template, linear, mlp,
+                     mlp_template, norm_template, rms_norm)
+from .moe import moe_ffn, moe_template
+from .ssm import (mamba2_block, mamba2_decode_step, ssm_state_shape,
+                  ssm_template)
+
+__all__ = ["decoder_template", "decoder_forward", "decoder_decode_step",
+           "init_cache_shapes", "lm_loss"]
+
+
+# ------------------------------------------------------------------ template
+
+def _block_template(cfg: ModelConfig, kind: str, layers: int | None):
+    """kind: dense | moe | ssm."""
+    if kind == "ssm":
+        return {"ln": norm_template(cfg.d_model, layers),
+                "ssm": ssm_template(cfg, layers)}
+    t = {"ln1": norm_template(cfg.d_model, layers),
+         "ln2": norm_template(cfg.d_model, layers),
+         "attn": attention_template(cfg, layers)}
+    if kind == "moe":
+        t["moe"] = moe_template(cfg, layers)
+    else:
+        t["mlp"] = mlp_template(cfg.d_model, cfg.d_ff, cfg.activation, layers)
+    return t
+
+
+def decoder_template(cfg: ModelConfig):
+    D, V = cfg.d_model, cfg.padded_vocab
+    t = {
+        "embed": ParamSpec((V, D), jnp.bfloat16, ("vocab", "embed")),
+        "final_norm": norm_template(D),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((D, V), jnp.bfloat16, ("embed", "vocab"))
+
+    if cfg.family in ("dense", "vlm"):
+        t["layers"] = _block_template(cfg, "dense", cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            dense_cfg = cfg.with_overrides(d_ff=cfg.dense_d_ff or cfg.d_ff)
+            t["dense_layers"] = _block_template(dense_cfg, "dense",
+                                                cfg.first_k_dense)
+        t["layers"] = _block_template(cfg, "moe", n_moe)
+    elif cfg.family == "ssm":
+        t["layers"] = _block_template(cfg, "ssm", cfg.n_layers)
+    elif cfg.family == "hybrid":
+        t["layers"] = _block_template(cfg, "ssm", cfg.n_layers)
+        t["shared_attn"] = _block_template(cfg, "dense", None)  # one block
+    else:
+        raise ValueError(f"decoder_template: bad family {cfg.family}")
+    return t
+
+
+# ----------------------------------------------------------------- blocks
+
+def _attn_seq(cfg, p, h, positions, *, window: int):
+    """Full-sequence attention sub-block. Returns (out, (k, v))."""
+    b, s, d = h.shape
+    q = constrain_heads(
+        linear(p["wq"], h, p.get("bq")).reshape(b, s, cfg.n_heads, cfg.head_dim))
+    k = linear(p["wk"], h, p.get("bk")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], h, p.get("bv")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = gqa_attention(q, k, v, causal=True, window=window, positions=positions)
+    o = constrain_heads(o)
+    return linear(p["wo"], o.reshape(b, s, -1)), (k, v)
+
+
+def _dense_block_seq(cfg, p, h, positions, *, window: int, with_moe: bool):
+    h = constrain_activations(h)
+    attn_out, kv = _attn_seq(cfg, p["attn"], rms_norm(p["ln1"], h, cfg.norm_eps),
+                             positions, window=window)
+    h = h + attn_out
+    hn = rms_norm(p["ln2"], h, cfg.norm_eps)
+    if with_moe:
+        ffn_out, aux = moe_ffn(p["moe"], hn, cfg)
+    else:
+        ffn_out, aux = mlp(p["mlp"], hn, cfg.activation), 0.0
+    return h + ffn_out, kv, aux
+
+
+def _ssm_block_seq(cfg, p, h, state=None):
+    h = constrain_activations(h)
+    out, new_state = mamba2_block(p["ssm"], rms_norm(p["ln"], h, cfg.norm_eps),
+                                  cfg, state)
+    return h + out, new_state
+
+
+# ------------------------------------------------------- sequence forward
+
+def decoder_forward(params, cfg: ModelConfig, tokens, positions=None,
+                    frontend_embeds=None, *, collect_cache: bool = False,
+                    remat: bool | None = None):
+    """Full-sequence forward (training and prefill).
+
+    tokens: (B, S_text) int32.  frontend_embeds: (B, P, D) optional patch /
+    audio-frame embeddings prepended to the text sequence (VLM stub).
+    Returns (logits (B,S,V), cache_or_None, aux_loss).
+    """
+    remat = cfg.remat if remat is None else remat
+    h = params["embed"][tokens]                           # (B, S_text, D)
+    if frontend_embeds is not None:
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    window = cfg.window if cfg.attention_kind == "sliding_window" else 0
+
+    aux_total = jnp.zeros((), jnp.float32)
+    cache = {}
+
+    def scan_blocks(h, stacked, body):
+        nonlocal aux_total
+        fn = jax.checkpoint(body) if remat else body
+
+        def step(carry, layer_params):
+            hh, aux = carry
+            hh, kv, aux_l = fn(hh, layer_params)
+            return (hh, aux + aux_l), kv
+
+        (h, aux), kvs = jax.lax.scan(step, (h, aux_total), stacked)
+        aux_total = aux
+        return h, kvs
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_k_dense:
+            def dense_body(hh, lp):
+                hh, kv, aux = _dense_block_seq(cfg.with_overrides(
+                    d_ff=cfg.dense_d_ff or cfg.d_ff), lp, hh, positions,
+                    window=window, with_moe=False)
+                return hh, kv, aux
+            h, kv_d = scan_blocks(h, params["dense_layers"], dense_body)
+
+        def body(hh, lp):
+            return _dense_block_seq(cfg, lp, hh, positions, window=window,
+                                    with_moe=cfg.family == "moe")
+        h, kv_m = scan_blocks(h, params["layers"], body)
+        if collect_cache:
+            if cfg.family == "moe" and cfg.first_k_dense:
+                k = jnp.concatenate([kv_d[0], kv_m[0]], axis=0)
+                v = jnp.concatenate([kv_d[1], kv_m[1]], axis=0)
+            else:
+                k, v = kv_m
+            cache = {"k": k, "v": v}                      # (L,B,S,KV,dh)
+
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            hh = _ssm_block_seq(cfg, lp, carry)
+            return hh[0], hh[1]
+        fn = jax.checkpoint(body) if remat else body
+        h, states = jax.lax.scan(fn, h, params["layers"])
+        if collect_cache:
+            cache = {"ssm": states}                       # dict of (L,...)
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        L = cfg.n_layers
+        bounds = list(range(0, L, every))
+        attn_caches = []
+        mamba_states = []
+
+        def body(carry, lp):
+            hh = _ssm_block_seq(cfg, lp, carry)
+            return hh[0], hh[1]
+        fn = jax.checkpoint(body) if remat else body
+        for gi, start in enumerate(bounds):
+            end = min(start + every, L)
+            seg = jax.tree.map(lambda x: x[start:end], params["layers"])
+            h, st = jax.lax.scan(fn, h, seg)
+            mamba_states.append(st)
+            # shared attention block after each group
+            sh = params["shared_attn"]
+            h2, kv, _ = _dense_block_seq(cfg, sh, h, positions,
+                                         window=window, with_moe=False)
+            h = h2
+            attn_caches.append(kv)
+        if collect_cache:
+            states = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *mamba_states)
+            k = jnp.stack([kv[0] for kv in attn_caches])  # (G,B,S,KV,dh)
+            v = jnp.stack([kv[1] for kv in attn_caches])
+            cache = {"ssm": states, "k": k, "v": v}
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return logits, (cache if collect_cache else None), aux_total
+
+
+# ----------------------------------------------------------------- caches
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """Shapes (not arrays) of the decode cache, as jax.ShapeDtypeStruct."""
+    dh, kv = cfg.head_dim, cfg.n_kv_heads
+    out = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        out["k"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, max_len, kv, dh), jnp.bfloat16)
+        out["v"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, max_len, kv, dh), jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        ss = ssm_state_shape(cfg, batch)
+        out["ssm"] = {
+            "ssd": jax.ShapeDtypeStruct((cfg.n_layers,) + ss["ssd"],
+                                        jnp.float32),
+            "conv": jax.ShapeDtypeStruct((cfg.n_layers,) + ss["conv"],
+                                         jnp.bfloat16),
+        }
+    if cfg.family == "hybrid":
+        groups = -(-cfg.n_layers // cfg.hybrid_attn_every)
+        out["k"] = jax.ShapeDtypeStruct((groups, batch, max_len, kv, dh),
+                                        jnp.bfloat16)
+        out["v"] = jax.ShapeDtypeStruct((groups, batch, max_len, kv, dh),
+                                        jnp.bfloat16)
+    return out
+
+
+def _update_cache(cache_l, new, pos):
+    """cache_l: (B,S,KV,dh); new: (B,1,KV,dh); pos: (B,) write index."""
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+    return jax.vmap(upd)(cache_l, new, pos)
+
+
+def _attn_decode(cfg, p, h, k_cache, v_cache, cache_len, *, window: int):
+    """h: (B,1,D). Updates cache at cache_len (mod ring for windows)."""
+    b = h.shape[0]
+    q = linear(p["wq"], h, p.get("bq")).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], h, p.get("bk")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], h, p.get("bv")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    pos = cache_len[:, None]                              # (B,1) true position
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    s_max = k_cache.shape[1]
+    write = cache_len % s_max if window > 0 else cache_len
+    k_cache = _update_cache(k_cache, k, write)
+    v_cache = _update_cache(v_cache, v, write)
+    o = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window)
+    return linear(p["wo"], o.reshape(b, 1, -1)), k_cache, v_cache
+
+
+def decoder_decode_step(params, cfg: ModelConfig, token, cache, cache_len):
+    """One decode step.  token: (B,1) int32; cache_len: (B,) int32 (tokens
+    already in cache).  Returns (logits (B,1,V), new_cache)."""
+    h = params["embed"][token]                            # (B,1,D)
+    window = cfg.window if cfg.attention_kind == "sliding_window" else 0
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_k_dense:
+            fk = cfg.first_k_dense
+            stacked = (params["dense_layers"], cache["k"][:fk],
+                       cache["v"][:fk])
+
+            def dense_body(hh, xs):
+                lp, kc, vc = xs
+                a, kc, vc = _attn_decode(
+                    cfg, lp["attn"], rms_norm(lp["ln1"], hh, cfg.norm_eps),
+                    kc, vc, cache_len, window=window)
+                hh = hh + a
+                dcfg = cfg.with_overrides(d_ff=cfg.dense_d_ff or cfg.d_ff)
+                hh = hh + mlp(lp["mlp"], rms_norm(lp["ln2"], hh, cfg.norm_eps),
+                              dcfg.activation)
+                return hh, (kc, vc)
+            h, (kd, vd) = jax.lax.scan(dense_body, h, stacked)
+            moe_k, moe_v = cache["k"][fk:], cache["v"][fk:]
+        else:
+            fk = 0
+            moe_k, moe_v = cache["k"], cache["v"]
+
+        def body(hh, xs):
+            lp, kc, vc = xs
+            a, kc, vc = _attn_decode(
+                cfg, lp["attn"], rms_norm(lp["ln1"], hh, cfg.norm_eps),
+                kc, vc, cache_len, window=window)
+            hh = hh + a
+            hn = rms_norm(lp["ln2"], hh, cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = moe_ffn(lp["moe"], hn, cfg, decode=True)
+            else:
+                f = mlp(lp["mlp"], hn, cfg.activation)
+            return hh + f, (kc, vc)
+
+        h, (km, vm) = jax.lax.scan(body, h, (params["layers"], moe_k, moe_v))
+        if fk:
+            new_cache["k"] = jnp.concatenate([kd, km], axis=0)
+            new_cache["v"] = jnp.concatenate([vd, vm], axis=0)
+        else:
+            new_cache["k"], new_cache["v"] = km, vm
+
+    elif cfg.family == "ssm":
+        def body(hh, xs):
+            lp, st = xs
+            out, new_st = mamba2_decode_step(
+                lp["ssm"], rms_norm(lp["ln"], hh, cfg.norm_eps), cfg, st)
+            return hh + out, new_st
+        h, new_states = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        new_cache["ssm"] = new_states
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        L = cfg.n_layers
+        bounds = list(range(0, L, every))
+        new_states, new_ks, new_vs = [], [], []
+
+        def body(hh, xs):
+            lp, st = xs
+            out, new_st = mamba2_decode_step(
+                lp["ssm"], rms_norm(lp["ln"], hh, cfg.norm_eps), cfg, st)
+            return hh + out, new_st
+        for gi, start in enumerate(bounds):
+            end = min(start + every, L)
+            seg = jax.tree.map(lambda x: x[start:end], params["layers"])
+            st = jax.tree.map(lambda x: x[start:end], cache["ssm"])
+            h, ns = jax.lax.scan(body, h, (seg, st))
+            new_states.append(ns)
+            sh = params["shared_attn"]
+            a, kc, vc = _attn_decode(
+                cfg, sh["attn"], rms_norm(sh["ln1"], h, cfg.norm_eps),
+                cache["k"][gi], cache["v"][gi], cache_len, window=window)
+            h = h + a
+            h = h + mlp(sh["mlp"], rms_norm(sh["ln2"], h, cfg.norm_eps),
+                        cfg.activation)
+            new_ks.append(kc)
+            new_vs.append(vc)
+        new_cache["ssm"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+        new_cache["k"] = jnp.stack(new_ks)
+        new_cache["v"] = jnp.stack(new_vs)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return logits, new_cache
+
+
+# -------------------------------------------------------------------- loss
+
+def lm_loss(logits, labels, mask=None):
+    """Mean next-token cross-entropy.  logits: (B,S,V); labels: (B,S)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

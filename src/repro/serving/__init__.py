@@ -1,0 +1,9 @@
+"""Real serving substrate: engine, KV manager, requests, metrics."""
+
+from .engine import ServingEngine
+from .kv_cache import KVCacheManager
+from .metrics import EngineMetrics
+from .request import RequestState, ServeRequest
+
+__all__ = ["ServingEngine", "KVCacheManager", "EngineMetrics",
+           "RequestState", "ServeRequest"]

@@ -1,0 +1,80 @@
+"""Slot-based KV cache manager with token-capacity accounting.
+
+TPU adaptation of vLLM's paged block manager (DESIGN.md): rather than
+16-token CUDA pages with in-kernel block tables, each running request owns
+a *slot* in dense (L, slots, S_max, KV, dh) cache tensors — the layout the
+Pallas flash-decode kernel consumes — while admission is governed by a
+global *token* budget exactly like vLLM's block accounting (a request
+holds context_len tokens of budget; eviction frees them).  Swapped
+requests keep their tokens on the host conceptually; the engine replays
+their KV by re-prefilling (recompute preemption mode, vLLM's default).
+"""
+
+from __future__ import annotations
+
+__all__ = ["KVCacheManager"]
+
+
+class KVCacheManager:
+    def __init__(self, n_slots: int, max_seq_len: int,
+                 capacity_tokens: int | None = None,
+                 watermark: float = 0.05):
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.capacity_tokens = capacity_tokens or n_slots * max_seq_len
+        self.watermark = watermark
+        self._free = list(range(n_slots))[::-1]
+        self._held: dict[str, tuple[int, int]] = {}  # rid -> (slot, tokens)
+
+    # ---------------------------------------------------------------- state
+
+    @property
+    def used_tokens(self) -> int:
+        return sum(t for _, t in self._held.values())
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def tokens_of(self, request_id: str) -> int:
+        return self._held[request_id][1]
+
+    def slot_of(self, request_id: str) -> int:
+        return self._held[request_id][0]
+
+    def holds(self, request_id: str) -> bool:
+        return request_id in self._held
+
+    # ------------------------------------------------------------ admission
+
+    def can_admit(self, context_len: int, growth_reserve: int = 0) -> bool:
+        if not self._free:
+            return False
+        budget = self.capacity_tokens * (1.0 - self.watermark)
+        return self.used_tokens + context_len + growth_reserve <= budget
+
+    def allocate(self, request_id: str, context_len: int) -> int:
+        """Claim a slot + token budget; returns the slot index."""
+        if request_id in self._held:
+            raise KeyError(f"{request_id} already holds a slot")
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        self._held[request_id] = (slot, context_len)
+        return slot
+
+    def grow(self, request_id: str, new_tokens: int = 1) -> bool:
+        """Account for decode growth; False if capacity exceeded."""
+        slot, t = self._held[request_id]
+        if self.used_tokens + new_tokens > self.capacity_tokens:
+            return False
+        if t + new_tokens > self.max_seq_len:
+            return False
+        self._held[request_id] = (slot, t + new_tokens)
+        return True
+
+    def release(self, request_id: str) -> int:
+        """Free the slot + budget (completion, eviction, abort)."""
+        slot, _ = self._held.pop(request_id)
+        self._free.append(slot)
+        return slot

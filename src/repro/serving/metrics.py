@@ -1,0 +1,31 @@
+"""Engine-level serving metrics (TTFT / TTLT / throughput accounting)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["EngineMetrics"]
+
+
+@dataclass
+class EngineMetrics:
+    prefills: int = 0
+    decode_iterations: int = 0
+    completed: int = 0
+    preemptions: int = 0
+
+    def summary(self, requests) -> dict:
+        done = [r for r in requests if np.isfinite(getattr(r, "ttlt", np.nan))]
+        if not done:
+            return {"completed": 0}
+        return {
+            "completed": len(done),
+            "mean_ttft_s": float(np.mean([r.ttft for r in done])),
+            "mean_ttlt_s": float(np.mean([r.ttlt for r in done])),
+            "mean_output_len": float(np.mean([r.generated for r in done])),
+            "prefills": self.prefills,
+            "decode_iterations": self.decode_iterations,
+            "preemptions": self.preemptions,
+        }

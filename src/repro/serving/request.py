@@ -1,0 +1,50 @@
+"""Request lifecycle for the real serving engine."""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+__all__ = ["RequestState", "ServeRequest"]
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    SWAPPED = "swapped"
+    FINISHED = "finished"
+    ABORTED = "aborted"
+
+
+@dataclass
+class ServeRequest:
+    request_id: str
+    prompt: str
+    prompt_tokens: list[int]
+    max_new_tokens: int = 512
+    eos_token: int = 0
+    temperature: float = 0.6          # the paper's default sampling temp
+    arrival: float = 0.0
+
+    state: RequestState = RequestState.WAITING
+    output_tokens: list[int] = field(default_factory=list)
+    slot: int = -1                    # engine batch slot while RUNNING
+    ttft: float = float("nan")
+    ttlt: float = float("nan")
+    n_preemptions: int = 0
+
+    @property
+    def input_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def generated(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def context_len(self) -> int:
+        return self.input_len + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.FINISHED, RequestState.ABORTED)

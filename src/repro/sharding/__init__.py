@@ -1,0 +1,10 @@
+"""Sharding rules: logical axes -> mesh PartitionSpecs + activation hook."""
+
+from .context import activation_sharding, constrain_activations
+from .partitioning import (batch_axes, kv_cache_spec, logits_spec,
+                           named_shardings, resolve_specs, rules_for,
+                           ssm_state_spec)
+
+__all__ = ["activation_sharding", "constrain_activations", "batch_axes",
+           "kv_cache_spec", "logits_spec", "named_shardings",
+           "resolve_specs", "rules_for", "ssm_state_spec"]

@@ -1,0 +1,96 @@
+"""Activation-sharding context: Megatron-style sequence parallelism hook.
+
+Model code calls ``constrain_activations(h)`` at block boundaries; by
+default it is the identity.  The launcher installs a PartitionSpec (e.g.
+P(('pod','data'), 'model', None) — sequence over 'model') before lowering
+big-model training steps, which caps the per-device rematerialized
+residual-stream memory (DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+__all__ = ["constrain_activations", "activation_sharding"]
+
+
+def constrain_activations(h):
+    spec = getattr(_state, "spec", None)
+    if spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def constrain_heads(x):
+    """Constrain (batch, seq, heads, head_dim) projections to head-sharded.
+
+    Without this, the backward of the QKV/output projections under 2-D
+    (FSDP x TP) weight sharding resolves the seq-vs-heads contraction
+    conflict by full replication ('Involuntary full rematerialization' —
+    60 x 1.27 GiB f32 on nemotron-340b; EXPERIMENTS.md §Perf)."""
+    spec = getattr(_state, "heads_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_inner(x):
+    """Constrain (batch, seq, d_inner) SSM projections: seq gathered,
+    inner dim sharded over 'model' — resolves the seq-vs-inner GSPMD
+    conflict in Mamba2 blocks under sequence parallelism (§Perf B)."""
+    spec = getattr(_state, "inner_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_ssm_state(x):
+    """Constrain the (B, H, P, N) SSD scan carry head-sharded over 'model'
+    — an unannotated zeros-init carry is otherwise replicated, forcing
+    full-head re-gathers of every chunk's inputs in the scan (§Perf B.3)."""
+    spec = getattr(_state, "state_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_expert_buf(x):
+    """Constrain the (E, C, D) MoE capacity buffer expert-sharded over
+    'model' — without it GSPMD replicates the expert einsums so every
+    chip computes all experts (measured 35x FLOP inflation on olmoe
+    prefill, §Perf addendum)."""
+    spec = getattr(_state, "expert_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def activation_sharding(spec, heads_spec=None, inner_spec=None,
+                        state_spec=None, expert_spec=None):
+    """spec: a PartitionSpec/NamedSharding for (batch, seq, d_model)
+    activations; heads_spec: for (batch, seq, heads, head_dim);
+    inner_spec: for (batch, seq, d_inner) SSM projections."""
+    prev = getattr(_state, "spec", None)
+    prev_h = getattr(_state, "heads_spec", None)
+    prev_i = getattr(_state, "inner_spec", None)
+    prev_s = getattr(_state, "state_spec", None)
+    prev_e = getattr(_state, "expert_spec", None)
+    _state.spec = spec
+    _state.heads_spec = heads_spec
+    _state.inner_spec = inner_spec
+    _state.state_spec = state_spec
+    _state.expert_spec = expert_spec
+    try:
+        yield
+    finally:
+        _state.spec = prev
+        _state.heads_spec = prev_h
+        _state.inner_spec = prev_i
+        _state.state_spec = prev_s
+        _state.expert_spec = prev_e

@@ -1,0 +1,118 @@
+"""Logical-axis -> mesh-axis resolution (per architecture family & mode).
+
+Parameters are declared with logical axes (repro.models.layers.ParamSpec);
+this module maps them to PartitionSpecs for a given mesh and execution
+mode.  Three rule sets:
+
+  * train:       tensor parallel over 'model' (+ optional FSDP: the stacked
+                 'layers' dim over 'data', i.e. ZeRO-3 — GSPMD all-gathers
+                 each layer's params at its scan step);
+  * serve:       tensor parallel over 'model', weights replicated over
+                 'data' (batch-parallel serving, small models);
+  * serve_big:   like serve but with 2-D weight *storage* ('embed' over
+                 'data' too) for models whose weights exceed HBM when only
+                 16-way sharded (nemotron-340b, internvl2-76b); GSPMD
+                 gathers each layer transiently at its scan step.
+
+KV caches: batch over ('pod','data') when divisible (dropped for B=1
+long-context); heads over 'model' when the config has >= model_parallel
+KV heads, otherwise the *sequence* dim over 'model' (flash-decode LSE
+combine — DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["rules_for", "resolve_specs", "batch_axes", "kv_cache_spec",
+           "ssm_state_spec", "logits_spec", "named_shardings"]
+
+
+def _mesh_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh, global_batch: int | None = None):
+    """Axes the global batch shards over (None when not divisible,
+    e.g. batch-1 long-context decode)."""
+    ax = [a for a in ("pod", "data") if a in _mesh_axes(mesh)]
+    if not ax:
+        return None
+    if global_batch is not None:
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        if global_batch % size != 0:
+            # try 'data' alone before giving up
+            if global_batch % mesh.shape["data"] == 0:
+                return ("data",)
+            return None
+    return tuple(ax)
+
+
+def rules_for(cfg, mode: str, mesh: Mesh) -> dict:
+    """Logical-axis -> mesh-axis (or None) mapping."""
+    has_pod = "pod" in _mesh_axes(mesh)
+    model_ax = "model"
+    kv_shardable = cfg.n_kv_heads >= cfg.model_parallel
+    rules = {
+        "vocab": model_ax,
+        "heads": model_ax,
+        "kv": model_ax if kv_shardable else None,
+        "mlp": model_ax,
+        "expert": model_ax,
+        "expert_mlp": None,
+        "router": None,
+        "ssm_inner": model_ax,
+        "embed": None,
+        "layers": None,
+        None: None,
+    }
+    if mode == "train" and cfg.fsdp:
+        # ZeRO-3/FSDP as 2-D weight *storage*: the non-'model' weight dim
+        # shards over 'data'; GSPMD all-gathers one layer slice per scan
+        # step (sharding the scanned 'layers' axis instead makes XLA hoist
+        # a full-stack gather out of the loop — measured 200 GiB of temp
+        # on nemotron-340b, see EXPERIMENTS.md §Dry-run).
+        rules["embed"] = ("pod", "data") if has_pod else "data"
+    if mode == "serve_big":
+        rules["embed"] = "data"
+    return rules
+
+
+def resolve_specs(spec_tree, rules: dict):
+    """Logical-axis tree -> PartitionSpec tree."""
+    def to_pspec(axes):
+        if axes is None:
+            return P()
+        return P(*[rules.get(a) for a in axes])
+    return jax.tree.map(to_pspec, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def kv_cache_spec(cfg, mode: str, mesh: Mesh, global_batch: int | None = None):
+    """PartitionSpec for (layers, batch, seq, kv_heads, head_dim) caches."""
+    b_ax = batch_axes(mesh, global_batch)
+    kv_shardable = cfg.n_kv_heads >= cfg.model_parallel
+    if kv_shardable:
+        return P(None, b_ax, None, "model", None)
+    return P(None, b_ax, "model", None, None)
+
+
+def ssm_state_spec(cfg, mode: str, mesh: Mesh, global_batch: int | None = None):
+    """Specs for the mamba2 state dict {ssd: (L,B,H,P,N), conv: (L,B,K,DI)}."""
+    b_ax = batch_axes(mesh, global_batch)
+    return {
+        "ssd": P(None, b_ax, "model", None, None),   # heads over model
+        "conv": P(None, b_ax, None, "model"),        # d_inner over model
+    }
+
+
+def logits_spec(mesh: Mesh, mode: str, global_batch: int | None = None):
+    return P(batch_axes(mesh, global_batch), "model")
+
+
+def named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,62 @@
+"""npz-based pytree checkpointing (flat-key format, no external deps)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):  # jax.tree flattens dicts in sorted-key order
+            v = tree[k]
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif hasattr(tree, "_fields"):  # NamedTuple (AdamWState)
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}{_SEP}"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = np.asarray(jnp.asarray(tree).astype(jnp.float32))
+        out[prefix.rstrip(_SEP)] = arr
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0) -> None:
+    flat = {"__step__": np.asarray(step)}
+    flat.update({f"params{_SEP}{k}": v
+                 for k, v in _flatten(params).items()})
+    if opt_state is not None:
+        flat.update({f"opt{_SEP}{k}": v
+                     for k, v in _flatten(opt_state).items()})
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, params_like, opt_like=None):
+    """Restore into the structure of params_like/opt_like templates."""
+    data = np.load(path)
+    step = int(data["__step__"])
+
+    def restore(template, prefix):
+        flat_keys = _flatten(template)
+        leaves, treedef = jax.tree.flatten(template)
+        keys = list(flat_keys.keys())
+        assert len(keys) == len(leaves)
+        vals = [jnp.asarray(data[f"{prefix}{_SEP}{k}"]).astype(leaf.dtype)
+                for k, leaf in zip(keys, leaves)]
+        return treedef.unflatten(vals)
+
+    params = restore(params_like, "params")
+    if opt_like is None:
+        return params, None, step
+    return params, restore(opt_like, "opt"), step

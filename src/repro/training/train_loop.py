@@ -1,0 +1,70 @@
+"""Training step factory: grad accumulation + AdamW, pjit-ready.
+
+``make_train_step(model, optimizer)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` that
+scans over ``cfg.grad_accum`` microbatches (accumulating grads in the
+parameter dtype — the DESIGN.md memory budget), then applies one AdamW
+update.  The same function is what the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamW, AdamWState
+
+__all__ = ["make_train_step", "make_lr_schedule"]
+
+
+def make_lr_schedule(base_lr: float = 3e-4, warmup: int = 100,
+                     total: int = 10_000, min_frac: float = 0.1):
+    """Linear warmup + cosine decay, as a scale factor on base_lr."""
+    def scale(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(1.0, warmup), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return scale
+
+
+def make_train_step(model, optimizer: AdamW, lr_schedule=None):
+    cfg = model.cfg
+    accum = max(1, cfg.grad_accum)
+    lr_schedule = lr_schedule or (lambda step: 1.0)
+
+    def loss_for_grad(params, mb):
+        loss, metrics = model.loss_fn(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+            def body(acc, mb):
+                (l, mt), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype),
+                                   acc, g)
+                return acc, (l, mt)
+
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metricses)
+        params, opt_state = optimizer.update(
+            grads, opt_state, params, lr_scale=lr_schedule(opt_state.count))
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,122 @@
+"""Predictor stack: embeddings, history store, semantic retrieval."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HistoryStore, LengthHistoryPredictor, PointPredictor,
+                        PromptEmbedder, ProxyModelPredictor,
+                        SemanticHistoryPredictor, empirical_distribution)
+from repro.simulator import make_profile
+
+
+def test_embedding_deterministic_unit_norm():
+    e = PromptEmbedder()
+    a = e.embed("hello world this is a test")
+    b = e.embed("hello world this is a test")
+    np.testing.assert_array_equal(a, b)
+    assert np.linalg.norm(a) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_embedding_similarity_orders_topics():
+    e = PromptEmbedder()
+    a = e.embed("summarize this medical paper on cardiology outcomes")
+    b = e.embed("summarize this medical paper on oncology trials")
+    c = e.embed("write a python quicksort function with tests")
+    assert a @ b > a @ c + 0.2
+
+
+def test_history_fifo_eviction():
+    h = HistoryStore(dim=4, capacity=3)
+    e = np.ones(4, np.float32) / 2
+    for i in range(5):
+        h.add(e, 10 + i, 100 + i)
+    assert len(h) == 3
+    assert set(h.global_output_lengths()) == {102, 103, 104}
+
+
+def test_history_search_threshold():
+    h = HistoryStore(dim=2)
+    h.add(np.array([1.0, 0.0], np.float32), 1, 10)
+    h.add(np.array([0.0, 1.0], np.float32), 1, 20)
+    idx = h.search_similar(np.array([1.0, 0.0], np.float32), 0.9)
+    assert list(h.output_lengths(idx)) == [10]
+
+
+def test_semantic_predictor_recovers_cluster_distribution():
+    prof = make_profile("write", seed=7)
+    rng = np.random.default_rng(0)
+    pred = SemanticHistoryPredictor()
+    # seed with history from two very different clusters
+    c_long, c_other = prof.clusters[0], prof.clusters[1]
+    for _ in range(80):
+        pred.observe(c_long.sample_prompt(rng), 64,
+                     c_long.sample_output_len(rng))
+        pred.observe(c_other.sample_prompt(rng), 64,
+                     c_other.sample_output_len(rng))
+    truth = c_long.true_length_samples(rng, 400).mean()
+    d = pred.predict(c_long.sample_prompt(rng), 64)
+    # prediction mean within 50% of cluster ground truth
+    assert abs(d.mean - truth) / truth < 0.5
+
+
+def test_semantic_beats_length_based_on_clustered_data():
+    """The paper's Fig. 9 premise as a unit test."""
+    prof = make_profile("sharegpt", seed=3)
+    rng = np.random.default_rng(1)
+    sem = SemanticHistoryPredictor()
+    lb = LengthHistoryPredictor()
+    clusters = prof.clusters[:6]
+    for _ in range(60):
+        for c in clusters:
+            p, il, ol = (c.sample_prompt(rng), c.sample_input_len(rng),
+                         c.sample_output_len(rng))
+            sem.observe(p, il, ol)
+            lb.observe(p, il, ol)
+    errs_s, errs_l = [], []
+    for _ in range(40):
+        c = clusters[int(rng.integers(len(clusters)))]
+        p, il = c.sample_prompt(rng), c.sample_input_len(rng)
+        truth = float(np.mean([c.sample_output_len(rng) for _ in range(64)]))
+        errs_s.append(abs(sem.predict(p, il).mean - truth))
+        errs_l.append(abs(lb.predict(p, il).mean - truth))
+    assert np.mean(errs_s) < np.mean(errs_l)
+
+
+def test_proxy_predictor_fits_and_predicts():
+    pred = ProxyModelPredictor(refit_every=64)
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        topic = "alpha beta" if i % 2 == 0 else "gamma delta"
+        pred.observe(f"{topic} prompt {i}", 32, 50 if i % 2 == 0 else 900)
+    d = pred.predict("alpha beta prompt x", 32)
+    d2 = pred.predict("gamma delta prompt y", 32)
+    assert d.mean < d2.mean
+
+
+def test_point_predictor_collapses():
+    inner = SemanticHistoryPredictor()
+    for i in range(20):
+        inner.observe("same prompt every time", 8, 100 + i * 10)
+    pp = PointPredictor(inner)
+    d = pp.predict("same prompt every time", 8)
+    assert len(d.lengths) == 1
+    assert d.probs[0] == 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=300),
+       st.integers(4, 64))
+def test_empirical_distribution_properties(samples, max_support):
+    d = empirical_distribution(np.array(samples), max_support)
+    assert d.probs.sum() == pytest.approx(1.0)
+    assert len(d.lengths) <= max_support
+    assert np.all(np.diff(d.lengths) > 0)
+    assert min(samples) <= d.mean <= max(samples)
+
+
+def test_noise_mixing():
+    d = empirical_distribution(np.array([100, 200, 300]))
+    noisy = d.mix_uniform(0.2, max_len=1000)
+    assert noisy.probs.sum() == pytest.approx(1.0)
+    assert len(noisy.lengths) > len(d.lengths)

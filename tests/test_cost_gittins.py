@@ -1,0 +1,126 @@
+"""Cost-model + Gittins-index math: unit and property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostDistribution, EncDecCost, HybridCost, LinearCost,
+                        OutputLengthCost, OverallLengthCost,
+                        ResourceBoundCost, gittins_index, gittins_index_batch,
+                        make_cost_model, mean_index)
+
+
+def test_resource_bound_formula():
+    cm = ResourceBoundCost()
+    # C = O^2/2 + I*O  (paper Sec. 3.2)
+    assert cm.total(100, 10) == pytest.approx(10 * 10 / 2 + 100 * 10)
+    # attained cost is the same cumulative sum truncated
+    assert cm.attained(100, 10) == pytest.approx(cm.total(100, 10))
+    assert cm.attained(100, 0) == 0.0
+
+
+def test_cost_model_rank_difference():
+    """The paper's Fig. 2(b) point: output-length order != true cost order
+    when inputs differ."""
+    rb, ol = ResourceBoundCost(), OutputLengthCost()
+    # A: long input short output; B: short input longer output
+    a = (2000, 100)
+    b = (10, 150)
+    assert ol.total(*a) < ol.total(*b)            # O-based: A first
+    assert rb.total(*a) > rb.total(*b)            # true cost: B first
+
+
+def test_all_models_monotone_in_output():
+    for name in ("resource_bound", "output_length", "overall_length",
+                 "linear", "hybrid", "enc_dec"):
+        cm = make_cost_model(name)
+        c1, c2 = cm.total(64, 10), cm.total(64, 500)
+        assert c2 > c1, name
+
+
+def test_distribution_pushforward():
+    cm = ResourceBoundCost()
+    d = cm.distribution(100, np.array([10, 20]), np.array([0.5, 0.5]))
+    assert d.support[0] == pytest.approx(10 * 10 / 2 + 1000)
+    assert d.probs.sum() == pytest.approx(1.0)
+    assert d.mean == pytest.approx(0.5 * (50 + 1000) + 0.5 * (200 + 2000))
+
+
+def test_gittins_deterministic_equals_value():
+    d = CostDistribution(np.array([42.0]), np.array([1.0]))
+    assert gittins_index(d) == pytest.approx(42.0)
+
+
+def test_gittins_bimodal_prefers_quick_completion():
+    """Paper Fig. 6: a lottery with mass near completion gets a low index
+    even when its mean is higher."""
+    lottery = CostDistribution(np.array([1.0, 1000.0]), np.array([0.4, 0.6]))
+    steady = CostDistribution(np.array([400.0]), np.array([1.0]))
+    assert lottery.support @ lottery.probs > steady.mean * 1.2  # higher mean
+    assert gittins_index(lottery) < gittins_index(steady)       # better index
+
+
+def test_gittins_refresh_after_lottery_lost():
+    lottery = CostDistribution(np.array([1.0, 1000.0]), np.array([0.4, 0.6]))
+    g0 = gittins_index(lottery, attained=0.0)
+    g_lost = gittins_index(lottery, attained=5.0)  # past the short mode
+    assert g_lost > g0 * 10
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.floats(1.0, 1e6), min_size=1, max_size=24),
+       st.lists(st.floats(0.01, 1.0), min_size=1, max_size=24))
+def test_gittins_properties(support, weights):
+    k = min(len(support), len(weights))
+    c = np.sort(np.array(support[:k]))
+    c = np.unique(c)
+    p = np.array(weights[:len(c)])
+    if len(p) < len(c):
+        c = c[:len(p)]
+    p = p / p.sum()
+    d = CostDistribution(c, p)
+    g = gittins_index(d)
+    # Gittins <= mean (Delta = max support recovers E[X]) and >= min support
+    assert g <= mean_index(d) + 1e-6
+    assert g >= c[0] - 1e-9
+    # scale equivariance: G(a*X) = a*G(X)
+    d2 = CostDistribution(c * 3.0, p)
+    assert gittins_index(d2) == pytest.approx(3.0 * g, rel=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 17), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_gittins_batch_matches_scalar(n, k, seed):
+    rng = np.random.default_rng(seed)
+    sup = np.sort(rng.uniform(1, 1e5, (n, k)), axis=1)
+    probs = rng.dirichlet(np.ones(k), n)
+    batch = gittins_index_batch(sup, probs)
+    for i in range(n):
+        d = CostDistribution(sup[i], probs[i])
+        # batch rows may contain duplicate support values; scalar path merges
+        assert batch[i] == pytest.approx(gittins_index(d), rel=1e-6)
+
+
+def test_shift_conditions_and_reorigins():
+    d = CostDistribution(np.array([10.0, 20.0, 30.0]),
+                         np.array([0.2, 0.3, 0.5]))
+    s = d.shift(15.0)
+    # mass at 10 is impossible (already consumed 15) -> conditioned out
+    np.testing.assert_allclose(s.support, [5.0, 15.0])
+    np.testing.assert_allclose(s.probs, [0.375, 0.625])
+    # fully exhausted prediction -> assume one more max-support tail
+    # (DHR belief; see CostDistribution.shift)
+    s2 = d.shift(100.0)
+    assert s2.support[0] == pytest.approx(30.0)
+    assert s2.probs.sum() == pytest.approx(1.0)
+
+
+def test_hybrid_and_encdec_adaptations():
+    hy = HybridCost(attn_fraction=0.5, ssm_fraction=0.5, ssm_step_weight=2.0)
+    assert hy.total(10, 4) == pytest.approx(0.5 * (8 + 40) + 1.0 * 14)
+    ed = EncDecCost(encoder_weight=1.0)
+    assert ed.attained(10, 0) == pytest.approx(100.0)  # encoder paid upfront
+    lin = LinearCost()
+    assert lin.total(10, 5) == 15.0
+    ov = OverallLengthCost()
+    assert ov.total(10, 5) == 20.0

@@ -1,0 +1,126 @@
+"""Scheduler facade + policy behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        make_policy, POLICY_NAMES)
+
+
+def oracle_with(dists):
+    o = OraclePredictor()
+    for prompt, d in dists.items():
+        o.register(prompt, d)
+    return o
+
+
+def det(n):
+    return LengthDistribution(np.array([n]), np.array([1.0]))
+
+
+def test_all_policies_constructible():
+    for name in POLICY_NAMES:
+        assert make_policy(name).name == name
+
+
+def test_fcfs_orders_by_arrival():
+    s = Scheduler(policy=make_policy("fcfs"),
+                  predictor=oracle_with({"a": det(10), "b": det(5)}))
+    s.admit("r1", "a", 10, arrival=1.0)
+    s.admit("r2", "b", 10, arrival=0.5)
+    assert s.order() == ["r2", "r1"]
+
+
+def test_ssjf_orders_by_predicted_length():
+    s = Scheduler(policy=make_policy("ssjf"),
+                  predictor=oracle_with({"long": det(500), "short": det(20)}))
+    s.admit("r1", "long", 10, arrival=0.0)
+    s.admit("r2", "short", 10, arrival=1.0)
+    assert s.order() == ["r2", "r1"]
+
+
+def test_sagesched_orders_by_gittins_not_mean():
+    lottery = LengthDistribution(np.array([5, 1000]), np.array([0.5, 0.5]))
+    steady = LengthDistribution(np.array([300]), np.array([1.0]))
+    s = Scheduler(policy=make_policy("sagesched"),
+                  predictor=oracle_with({"lot": lottery, "st": steady}))
+    s.admit("r1", "st", 10, arrival=0.0)
+    s.admit("r2", "lot", 10, arrival=1.0)
+    assert s.order() == ["r2", "r1"]  # lottery first despite higher mean
+    # mean policy picks the other order
+    s2 = Scheduler(policy=make_policy("mean"),
+                   predictor=oracle_with({"lot": lottery, "st": steady}))
+    s2.admit("r1", "st", 10, arrival=0.0)
+    s2.admit("r2", "lot", 10, arrival=1.0)
+    assert s2.order() == ["r1", "r2"]
+
+
+def test_bucket_refresh_deprioritizes_lost_lottery():
+    lottery = LengthDistribution(np.array([5, 1000]), np.array([0.5, 0.5]))
+    steady = LengthDistribution(np.array([300]), np.array([1.0]))
+    s = Scheduler(policy=make_policy("sagesched"), bucket_size=50,
+                  predictor=oracle_with({"lot": lottery, "st": steady}))
+    s.admit("r1", "st", 10, arrival=0.0)
+    s.admit("r2", "lot", 10, arrival=1.0)
+    assert s.order()[0] == "r2"
+    s.on_progress("r2", 60)  # crossed bucket boundary past the short mode
+    assert s.order()[0] == "r1"
+    assert s.stats["refreshes"] >= 1
+
+
+def test_gittins_no_refresh_keeps_priority():
+    lottery = LengthDistribution(np.array([5, 1000]), np.array([0.5, 0.5]))
+    s = Scheduler(policy=make_policy("gittins"), bucket_size=50,
+                  predictor=oracle_with({"lot": lottery}))
+    s.admit("r2", "lot", 10, arrival=0.0)
+    p0 = s.get("r2").priority
+    s.on_progress("r2", 60)
+    assert s.get("r2").priority == p0
+    assert s.stats["refreshes"] == 0
+
+
+def test_fastserve_demotes_at_quantum_boundaries():
+    pol = make_policy("fastserve", base_quantum=16)
+    s = Scheduler(policy=pol, predictor=oracle_with({"p": det(100)}))
+    s.admit("r", "p", 10, arrival=0.0)
+    lvl0 = pol.level_of(0)
+    s.on_progress("r", 20)  # past first quantum (16)
+    assert pol.level_of(20) > lvl0
+    assert s.get("r").priority > pol.LEVEL_SPAN - 1
+
+
+def test_trail_conditional_remaining():
+    d = LengthDistribution(np.array([10, 100]), np.array([0.5, 0.5]))
+    s = Scheduler(policy=make_policy("trail"), bucket_size=10,
+                  predictor=oracle_with({"p": d}))
+    s.admit("r", "p", 10, arrival=0.0)
+    p0 = s.get("r").priority  # E[remaining] = 55
+    s.on_progress("r", 20)    # only the 100 mode remains -> remaining 80
+    assert s.get("r").priority != p0
+
+
+def test_completion_feeds_history():
+    s = Scheduler()  # default: semantic history predictor + sagesched
+    s.admit("r", "some prompt text here", 12, arrival=0.0)
+    s.on_complete("r", 77)
+    assert len(s.predictor.history) == 1
+    assert "r" not in s
+
+
+def test_double_admit_raises():
+    s = Scheduler(predictor=oracle_with({"p": det(5)}))
+    s.admit("r", "p", 1, arrival=0.0)
+    with pytest.raises(KeyError):
+        s.admit("r", "p", 1, arrival=0.0)
+
+
+def test_aged_sagesched_time_varying():
+    """Beyond-paper aging: an old request's priority improves with time."""
+    lottery = LengthDistribution(np.array([5, 1000]), np.array([0.5, 0.5]))
+    s = Scheduler(policy=make_policy("sagesched_aged", tau_age=10.0),
+                  predictor=oracle_with({"p": lottery}))
+    s.admit("r", "p", 10, arrival=0.0)
+    s.set_now(0.0)
+    p0 = s.get("r").priority
+    s.set_now(100.0)  # 10x tau of queueing age
+    assert s.get("r").priority < p0 / 5

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the SageSched system (paper claims as
+executable assertions, on the calibrated simulator)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Scheduler, SemanticHistoryPredictor, make_cost_model,
+                        make_policy)
+from repro.simulator import generate_workload, make_profile, simulate
+
+PROFILES = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+
+
+def _seeded_predictor(seed=5, per_cluster=40):
+    rng = np.random.default_rng(seed)
+    p = SemanticHistoryPredictor()
+    prompts, ils, ols = [], [], []
+    for prof in PROFILES:
+        for c in prof.clusters:
+            for _ in range(per_cluster):
+                prompts.append(c.sample_prompt(rng))
+                ils.append(c.sample_input_len(rng))
+                ols.append(c.sample_output_len(rng))
+    p.seed(prompts, ils, ols)
+    return p
+
+
+def _run(policy, cost_model="resource_bound", noise=0.0, rps=10.0, n=400,
+         seed=11):
+    reqs = generate_workload(PROFILES, n, rps=rps, seed=seed)
+    sched = Scheduler(policy=make_policy(policy),
+                      predictor=_seeded_predictor(),
+                      cost_model=make_cost_model(cost_model),
+                      noise_weight=noise)
+    return simulate(reqs, sched)
+
+
+def test_sagesched_beats_every_baseline_on_ttlt():
+    """The paper's headline: SageSched attains the best mean TTLT."""
+    sage = _run("sagesched").mean_ttlt()
+    for baseline in ("fcfs", "fastserve", "trail", "mean"):
+        assert sage < _run(baseline).mean_ttlt(), baseline
+
+
+def test_resource_bound_cost_beats_output_length_cost():
+    """Paper Sec. 4.3.2 (Fig. 10): hybrid cost model superiority."""
+    rb = _run("sagesched", cost_model="resource_bound").mean_ttlt()
+    ol = _run("sagesched", cost_model="output_length").mean_ttlt()
+    assert rb < ol
+
+
+def test_gittins_beats_mean_ordering():
+    """Paper Sec. 4.3.3 (Fig. 11): Gittins beats expectation ordering."""
+    g = _run("gittins").mean_ttlt()
+    m = _run("mean").mean_ttlt()
+    assert g < m
+
+
+def test_gittins_robust_to_prediction_noise():
+    """Fig. 11's noise experiment: adding 1:4 uniform noise degrades the
+    Gittins policy far less (relatively) than point-based SJF."""
+    sage_clean = _run("sagesched").mean_ttlt()
+    sage_noisy = _run("sagesched", noise=0.2).mean_ttlt()
+    sjf_clean = _run("ssjf").mean_ttlt()
+    sjf_noisy = _run("ssjf", noise=0.2).mean_ttlt()
+    sage_degr = sage_noisy / sage_clean
+    sjf_degr = sjf_noisy / sjf_clean
+    assert sage_degr < sjf_degr + 0.05
+
+
+def test_ttft_not_sacrificed():
+    """Fig. 7: SageSched also improves TTFT vs FCFS (head-of-line relief)."""
+    assert _run("sagesched").mean_ttft() < _run("fcfs").mean_ttft()
+
+
+def test_improvement_grows_with_load():
+    """'improvements are higher with more intensive competition'."""
+    gains = []
+    for rps in (4.0, 12.0):
+        f = _run("fcfs", rps=rps).mean_ttlt()
+        s = _run("sagesched", rps=rps).mean_ttlt()
+        gains.append((f - s) / f)
+    assert gains[1] > gains[0] - 0.02
