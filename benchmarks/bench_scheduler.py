@@ -1,0 +1,191 @@
+"""Scheduler decision-throughput benchmark: object path vs batch path.
+
+Measures the three hot operations of the decision loop at several queue
+depths, for each priority backend:
+
+  * admit/sec    — predict + cost pushforward + initial priority,
+  * refresh/sec  — bucket-boundary priority recomputation (the paper's
+                   runtime Gittins refresh; Fig. 12's scaling bottleneck),
+  * order() ms   — full-queue priority ranking.
+
+The object backend is the seed's per-request scalar path; numpy is the
+vectorized BatchState path (bit-identical results); pallas runs the
+Gittins kernel (interpret-mode off-TPU, so only meaningful as a hot path
+on real hardware — enable with --backends ...,pallas).
+
+Emits BENCH_scheduler.json (repo root by default) so future PRs can
+track the trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_scheduler.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (LengthDistribution, Predictor, ResourceBoundCost,
+                        Scheduler, make_policy)
+
+
+class PooledPredictor(Predictor):
+    """Deterministic zero-cost predictor: a fixed pool of pre-generated
+    length distributions keyed by prompt, so the benchmark times the
+    scheduler, not the embedding stack."""
+
+    def __init__(self, pool: int = 256, max_support: int = 48, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.dists = []
+        for _ in range(pool):
+            k = int(rng.integers(4, max_support + 1))
+            lens = np.sort(rng.choice(np.arange(1, 4096), k, replace=False))
+            self.dists.append(LengthDistribution(lens, rng.dirichlet(
+                np.ones(k))))
+
+    def predict(self, prompt: str, input_len: int) -> LengthDistribution:
+        # crc32, not hash(): PYTHONHASHSEED randomizes the latter per
+        # process, which would make the recorded trajectory irreproducible
+        return self.dists[zlib.crc32(prompt.encode()) % len(self.dists)]
+
+
+def make_scheduler(backend: str, policy: str, bucket_size: int) -> Scheduler:
+    return Scheduler(predictor=PooledPredictor(),
+                     cost_model=ResourceBoundCost(),
+                     policy=make_policy(policy),
+                     bucket_size=bucket_size,
+                     priority_backend=backend)
+
+
+def bench_one(backend: str, depth: int, *, policy: str = "sagesched",
+              bucket_size: int = 200, reps: int = 3) -> dict:
+    sched = make_scheduler(backend, policy, bucket_size)
+    rng = np.random.default_rng(depth)
+    input_lens = rng.integers(16, 2048, depth)
+
+    t0 = time.perf_counter()
+    for i in range(depth):
+        sched.admit(f"r{i}", f"prompt-{i % 256}", int(input_lens[i]),
+                    arrival=float(i))
+    admit_s = time.perf_counter() - t0
+
+    # refresh cycle: push every request across its next bucket boundary,
+    # then (batch path) recompute all dirty priorities in one call.  The
+    # object path refreshes eagerly inside on_progress_many — both
+    # timings cover the same boundary crossings end to end.
+    ids = [f"r{i}" for i in range(depth)]
+    gen = np.zeros(depth, np.int64)
+    refresh_s = 0.0
+    n_refreshed = 0
+    for _ in range(reps):
+        gen += bucket_size
+        t0 = time.perf_counter()
+        sched.on_progress_many(ids, gen)
+        sched.refresh()
+        refresh_s += time.perf_counter() - t0
+        n_refreshed += depth
+
+    order_times = []
+    for _ in range(max(3, reps)):
+        t0 = time.perf_counter()
+        sched.order()
+        order_times.append(time.perf_counter() - t0)
+
+    return {
+        "backend": backend,
+        "depth": depth,
+        "policy": policy,
+        "admit_per_s": depth / admit_s,
+        "refresh_per_s": n_refreshed / refresh_s,
+        "order_ms": float(np.median(order_times) * 1e3),
+        "refreshes_counted": sched.stats["refreshes"],
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small depths + fewer reps (CI smoke)")
+    ap.add_argument("--depths", default=None,
+                    help="comma-separated queue depths")
+    ap.add_argument("--backends", default="object,numpy",
+                    help="comma-separated: object,numpy,pallas")
+    ap.add_argument("--policy", default="sagesched")
+    ap.add_argument("--bucket-size", type=int, default=200)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_scheduler.json"))
+    args = ap.parse_args(argv)
+
+    if args.depths:
+        depths = [int(d) for d in args.depths.split(",")]
+    else:
+        depths = [100, 1000] if args.quick else [100, 1000, 10000]
+    reps = args.reps or (2 if args.quick else 3)
+    backends = args.backends.split(",")
+
+    results = []
+    for depth in depths:
+        for backend in backends:
+            r = bench_one(backend, depth, policy=args.policy,
+                          bucket_size=args.bucket_size, reps=reps)
+            results.append(r)
+            print(f"{backend:>7s} depth={depth:>6d}  "
+                  f"admit/s={r['admit_per_s']:>10.0f}  "
+                  f"refresh/s={r['refresh_per_s']:>10.0f}  "
+                  f"order={r['order_ms']:.3f} ms")
+
+    speedup = {}
+    for depth in depths:
+        by = {r["backend"]: r for r in results if r["depth"] == depth}
+        if "object" in by and "numpy" in by:
+            speedup[str(depth)] = {
+                "refresh": by["numpy"]["refresh_per_s"]
+                / by["object"]["refresh_per_s"],
+                "order": by["object"]["order_ms"] / by["numpy"]["order_ms"],
+                "admit": by["numpy"]["admit_per_s"]
+                / by["object"]["admit_per_s"],
+            }
+            print(f"numpy vs object @ {depth}: "
+                  f"{speedup[str(depth)]['refresh']:.1f}x refresh, "
+                  f"{speedup[str(depth)]['order']:.1f}x order")
+
+    payload = {
+        "bench": "scheduler_decision_throughput",
+        "policy": args.policy,
+        "bucket_size": args.bucket_size,
+        "reps": reps,
+        "results": results,
+        "speedup_numpy_vs_object": speedup,
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return payload
+
+
+def run(quick: bool = False):
+    """Harness adapter (benchmarks.run): emit name,value,derived rows."""
+    try:
+        from .common import emit       # python -m benchmarks.run
+    except ImportError:
+        from common import emit        # direct script execution
+    payload = main(["--quick"] if quick else [])
+    rows = []
+    for r in payload["results"]:
+        tag = f"scheduler.{r['backend']}_{r['depth']}"
+        rows.append((f"{tag}.refresh_per_s", round(r["refresh_per_s"]),
+                     "refresh_per_s"))
+        rows.append((f"{tag}.order_ms", round(r["order_ms"], 3), "ms"))
+    for depth, s in payload["speedup_numpy_vs_object"].items():
+        rows.append((f"scheduler.speedup_{depth}.refresh",
+                     round(s["refresh"], 2), "x_vs_object"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -11,11 +11,12 @@ import argparse
 import sys
 import time
 
-from . import (bench_kernels, fig7_end_to_end, fig8_per_dataset,
-               fig9_predictor, fig10_cost_model, fig11_policy,
-               fig12_scalability, fig13_sensitivity, roofline)
+from . import (bench_kernels, bench_scheduler, fig7_end_to_end,
+               fig8_per_dataset, fig9_predictor, fig10_cost_model,
+               fig11_policy, fig12_scalability, fig13_sensitivity, roofline)
 
 SUITES = {
+    "scheduler": bench_scheduler.run,
     "fig7": fig7_end_to_end.run,
     "fig8": fig8_per_dataset.run,
     "fig9": fig9_predictor.run,

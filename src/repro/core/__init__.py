@@ -9,26 +9,35 @@ Public API:
     Scheduler: the Fig. 3 workflow facade
 """
 
+from .backends import (BACKEND_NAMES, BatchView, NumpyPriorityBackend,
+                       PallasPriorityBackend, PriorityBackend,
+                       make_priority_backend)
 from .cost_model import (CostDistribution, CostModel, EncDecCost, HybridCost,
                          LinearCost, OutputLengthCost, OverallLengthCost,
-                         ResourceBoundCost, make_cost_model)
+                         ResourceBoundCost, bucketize_support,
+                         make_cost_model)
 from .embedding import PromptEmbedder
-from .gittins import gittins_index, gittins_index_batch, mean_index
+from .gittins import (gittins_index, gittins_index_batch, mean_index,
+                      mean_index_batch)
 from .history import HistoryRecord, HistoryStore
 from .policies import POLICY_NAMES, Policy, make_policy
 from .predictor import (LengthDistribution, LengthHistoryPredictor,
                         OraclePredictor, PointPredictor, Predictor,
                         ProxyModelPredictor, SemanticHistoryPredictor,
                         empirical_distribution)
-from .scheduler import ScheduledRequest, Scheduler
+from .scheduler import BatchState, ScheduledRequest, Scheduler
 
 __all__ = [
     "CostDistribution", "CostModel", "EncDecCost", "HybridCost", "LinearCost",
     "OutputLengthCost", "OverallLengthCost", "ResourceBoundCost",
-    "make_cost_model", "PromptEmbedder", "gittins_index",
-    "gittins_index_batch", "mean_index", "HistoryRecord", "HistoryStore",
+    "bucketize_support", "make_cost_model", "PromptEmbedder",
+    "gittins_index", "gittins_index_batch", "mean_index", "mean_index_batch",
+    "BACKEND_NAMES", "BatchView", "NumpyPriorityBackend",
+    "PallasPriorityBackend", "PriorityBackend", "make_priority_backend",
+    "HistoryRecord", "HistoryStore",
     "POLICY_NAMES", "Policy", "make_policy", "LengthDistribution",
     "LengthHistoryPredictor", "OraclePredictor", "PointPredictor",
     "Predictor", "ProxyModelPredictor", "SemanticHistoryPredictor",
-    "empirical_distribution", "ScheduledRequest", "Scheduler",
+    "empirical_distribution", "BatchState", "ScheduledRequest",
+    "Scheduler",
 ]

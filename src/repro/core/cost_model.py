@@ -40,8 +40,49 @@ __all__ = [
     "HybridCost",
     "EncDecCost",
     "CostDistribution",
+    "bucketize_support",
     "make_cost_model",
 ]
+
+
+def bucketize_support(support: np.ndarray, probs: np.ndarray, k: int
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Pack a ragged discrete distribution into exactly ``k`` points.
+
+    When the distribution has <= k points it is *padded*: the support
+    repeats its last (largest) value and the padded probabilities are 0,
+    which keeps the support non-decreasing and is exactly inert for every
+    batched priority computation (they mask on ``probs > 0``).  When it
+    has > k points it is *compressed* by equal-mass binning, with each
+    bin represented by its conditional mean — this is the only lossy path
+    and is avoided in practice by BatchState's column auto-growth.
+    """
+    support = np.asarray(support, np.float64)
+    probs = np.asarray(probs, np.float64)
+    k0 = support.shape[0]
+    if k0 == k:
+        return support.copy(), probs.copy()
+    if k0 < k:
+        sup = np.concatenate([support, np.full(k - k0, support[-1])])
+        p = np.concatenate([probs, np.zeros(k - k0)])
+        return sup, p
+    # compress: equal-mass bins, conditional-mean representatives
+    cdf = np.cumsum(probs)
+    edges = np.searchsorted(cdf, np.linspace(0.0, 1.0, k + 1)[1:-1],
+                            side="left")
+    bins = np.unique(np.concatenate([[0], edges + 1, [k0]]))
+    sup = np.empty(k, np.float64)
+    p = np.zeros(k, np.float64)
+    for j in range(len(bins) - 1):
+        lo, hi = bins[j], bins[j + 1]
+        m = probs[lo:hi].sum()
+        p[j] = m
+        sup[j] = (support[lo:hi] @ probs[lo:hi]) / m if m > 0 \
+            else support[lo:hi].mean()
+    used = len(bins) - 1
+    sup[used:] = sup[used - 1]
+    p = p / p.sum()
+    return np.maximum.accumulate(sup), p
 
 
 @dataclass(frozen=True)
@@ -57,7 +98,16 @@ class CostDistribution:
 
     @property
     def mean(self) -> float:
-        return float(np.sum(self.support * self.probs))
+        # sequential (cumsum) summation so the batched refresh path —
+        # which runs cumsum over zero-padded (n, k) rows — is bit-identical
+        # to this scalar oracle
+        return float(np.cumsum(self.support * self.probs)[-1])
+
+    def bucketize(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Fixed-k (support, probs) arrays for BatchState packing: padded
+        (repeat-last support, zero prob) when <= k points, equal-mass
+        compressed otherwise.  See ``bucketize_support``."""
+        return bucketize_support(self.support, self.probs, k)
 
     def shift(self, attained: float) -> "CostDistribution":
         """Condition on X > ``attained`` and re-origin at it (the Bayesian
@@ -78,7 +128,9 @@ class CostDistribution:
             return CostDistribution(np.array([tail]), np.array([1.0]))
         rem = self.support[alive] - attained
         probs = self.probs[alive]
-        return CostDistribution(rem, probs / probs.sum())
+        # sequential normalizer (see ``mean``): keeps scalar and batched
+        # conditioning bit-identical
+        return CostDistribution(rem, probs / np.cumsum(probs)[-1])
 
 
 class CostModel:
@@ -92,6 +144,15 @@ class CostModel:
     def attained(self, input_len: int, generated: int) -> float:
         """Cost consumed so far, after ``generated`` output tokens."""
         return float(self.total(input_len, generated))
+
+    def attained_batch(self, input_lens: np.ndarray, generated: np.ndarray
+                       ) -> np.ndarray:
+        """Vectorized ``attained`` over parallel (n,) arrays.  Subclasses
+        override with closed forms; this fallback loops (correct for any
+        model, slow — it exists so custom models keep working)."""
+        return np.array([self.attained(int(i), int(g))
+                         for i, g in zip(np.asarray(input_lens),
+                                         np.asarray(generated))], np.float64)
 
     def distribution(self, input_len: int, lengths: np.ndarray,
                      probs: np.ndarray) -> CostDistribution:
@@ -118,6 +179,11 @@ class ResourceBoundCost(CostModel):
         o = np.asarray(output_len, np.float64)
         return o * o / 2.0 + float(input_len) * o
 
+    def attained_batch(self, input_lens, generated):
+        i = np.asarray(input_lens, np.float64)
+        g = np.asarray(generated, np.float64)
+        return g * g / 2.0 + i * g
+
 
 class OutputLengthCost(CostModel):
     """Ablation: C = O (SSJF / LTR / TRAIL cost proxy)."""
@@ -126,6 +192,9 @@ class OutputLengthCost(CostModel):
 
     def total(self, input_len, output_len):
         return np.asarray(output_len, np.float64)
+
+    def attained_batch(self, input_lens, generated):
+        return np.asarray(generated, np.float64).copy()
 
 
 class OverallLengthCost(CostModel):
@@ -137,6 +206,10 @@ class OverallLengthCost(CostModel):
     def total(self, input_len, output_len):
         return float(input_len) + 2.0 * np.asarray(output_len, np.float64)
 
+    def attained_batch(self, input_lens, generated):
+        return np.asarray(input_lens, np.float64) \
+            + 2.0 * np.asarray(generated, np.float64)
+
 
 class LinearCost(CostModel):
     """SSM adaptation: constant state, constant per-step cost →
@@ -146,6 +219,10 @@ class LinearCost(CostModel):
 
     def total(self, input_len, output_len):
         return float(input_len) + np.asarray(output_len, np.float64)
+
+    def attained_batch(self, input_lens, generated):
+        return np.asarray(input_lens, np.float64) \
+            + np.asarray(generated, np.float64)
 
 
 class HybridCost(CostModel):
@@ -167,6 +244,11 @@ class HybridCost(CostModel):
         lin = float(input_len) + o
         return self.alpha * quad + self.beta * lin
 
+    def attained_batch(self, input_lens, generated):
+        i = np.asarray(input_lens, np.float64)
+        g = np.asarray(generated, np.float64)
+        return self.alpha * (g * g / 2.0 + i * g) + self.beta * (i + g)
+
 
 class EncDecCost(CostModel):
     """Encoder-decoder (Seamless backbone): one-shot encoder cost ~ I^2
@@ -187,6 +269,11 @@ class EncDecCost(CostModel):
         # encoder cost is paid up-front at prefill
         i = float(input_len)
         g = float(generated)
+        return g * g / 2.0 + i * g + self.encoder_weight * i * i
+
+    def attained_batch(self, input_lens, generated):
+        i = np.asarray(input_lens, np.float64)
+        g = np.asarray(generated, np.float64)
         return g * g / 2.0 + i * g + self.encoder_weight * i * i
 
 

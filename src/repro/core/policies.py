@@ -36,6 +36,19 @@ __all__ = ["Policy", "make_policy", "POLICY_NAMES"]
 
 
 class Policy:
+    """Scalar interface (``priority``) plus the batched interface
+    (``priority_batch``) used by the array-native scheduler hot path.
+
+    ``priority_batch`` receives a *view* — a struct of parallel arrays
+    (see ``repro.core.backends.BatchView``): ``cost_sup``/``cost_probs``
+    and ``len_sup``/``len_probs`` as (n, k) bucketized distributions
+    (padded entries carry prob 0), ``generated``/``attained``/``arrival``/
+    ``input_len`` as (n,) vectors — and a backend exposing batched
+    ``gittins``/``mean`` evaluators.  It returns the (n,) priorities in
+    one fused pass; the scalar ``priority`` remains the oracle it is
+    property-tested against.
+    """
+
     name = "base"
     preemptive = False
     refreshing = False
@@ -44,6 +57,38 @@ class Policy:
     def priority(self, sr) -> float:  # sr: scheduler.ScheduledRequest
         raise NotImplementedError
 
+    def priority_batch(self, view, backend) -> np.ndarray:
+        """Batched priorities; subclasses override with vectorized math.
+        (The Scheduler falls back to the scalar path for policies that
+        don't.)"""
+        raise NotImplementedError
+
+    @property
+    def has_batch(self) -> bool:
+        """True when the batch path is trustworthy: ``priority_batch``
+        must be defined at (or below) the class that defines the scalar
+        ``priority`` in the MRO.  A subclass that overrides only the
+        scalar falls back to it — an inherited ``priority_batch`` would
+        silently disagree with the override."""
+        cls = type(self)
+        if cls.priority_batch is Policy.priority_batch:
+            return False
+        pb = next(c for c in cls.__mro__ if "priority_batch" in c.__dict__)
+        pr = next((c for c in cls.__mro__ if "priority" in c.__dict__),
+                  Policy)
+        return issubclass(pb, pr)
+
+    @property
+    def has_boundary_batch(self) -> bool:
+        """Same MRO rule for the refresh-boundary pair: the vectorized
+        ``next_boundary_batch`` is used only if it is defined at or
+        below the scalar ``next_boundary`` override."""
+        cls = type(self)
+        nb = next(c for c in cls.__mro__
+                  if "next_boundary_batch" in c.__dict__)
+        ns = next(c for c in cls.__mro__ if "next_boundary" in c.__dict__)
+        return issubclass(nb, ns)
+
     def next_boundary(self, sr, bucket_size: int) -> float:
         """Generated-token count at which the priority must next be
         recomputed.  Default: the paper's cost-bucket boundaries."""
@@ -51,12 +96,22 @@ class Policy:
             return float("inf")
         return (sr.generated // bucket_size + 1) * bucket_size
 
+    def next_boundary_batch(self, generated: np.ndarray, bucket_size: int
+                            ) -> np.ndarray:
+        if not self.refreshing:
+            return np.full(np.asarray(generated).shape[0], np.inf)
+        g = np.asarray(generated, np.int64)
+        return ((g // bucket_size + 1) * bucket_size).astype(np.float64)
+
 
 class FCFSPolicy(Policy):
     name = "fcfs"
 
     def priority(self, sr) -> float:
         return sr.arrival
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        return view.arrival.astype(np.float64, copy=True)
 
 
 class FastServePolicy(Policy):
@@ -73,6 +128,10 @@ class FastServePolicy(Policy):
         self.base_quantum = base_quantum
         self.n_levels = n_levels
 
+    def _cum_budgets(self) -> np.ndarray:
+        q = self.base_quantum * (2 ** np.arange(self.n_levels, dtype=np.int64))
+        return np.cumsum(q)
+
     def level_of(self, service_tokens: int) -> int:
         """MLFQ level after ``service_tokens`` tokens of service: quantum of
         level k is base_quantum * 2^k; demote when cumulative budget spent."""
@@ -87,6 +146,13 @@ class FastServePolicy(Policy):
     def priority(self, sr) -> float:
         return self.level_of(sr.generated) * self.LEVEL_SPAN + sr.arrival
 
+    def priority_batch(self, view, backend) -> np.ndarray:
+        cum = self._cum_budgets()
+        g = np.asarray(view.generated, np.int64)
+        level = np.minimum(np.searchsorted(cum, g, side="right"),
+                           self.n_levels - 1)
+        return level.astype(np.float64) * self.LEVEL_SPAN + view.arrival
+
     def next_boundary(self, sr, bucket_size: int) -> float:
         """Demotion happens at cumulative quantum boundaries, not at the
         Gittins cost buckets."""
@@ -98,6 +164,12 @@ class FastServePolicy(Policy):
             q *= 2
         return float("inf")
 
+    def next_boundary_batch(self, generated, bucket_size: int) -> np.ndarray:
+        cum = self._cum_budgets().astype(np.float64)
+        g = np.asarray(generated, np.int64)
+        idx = np.searchsorted(cum, g, side="right")
+        return np.concatenate([cum, [np.inf]])[idx]
+
 
 class SSJFPolicy(Policy):
     """Non-preemptive SJF on the predicted mean output length."""
@@ -106,6 +178,11 @@ class SSJFPolicy(Policy):
 
     def priority(self, sr) -> float:
         return sr.length_dist.mean
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        lp = view.len_probs
+        return np.cumsum(np.where(lp > 0, view.len_sup * lp, 0.0),
+                         axis=1)[:, -1]
 
 
 class LTRPolicy(Policy):
@@ -117,6 +194,11 @@ class LTRPolicy(Policy):
 
     def priority(self, sr) -> float:
         return float(sr.length_dist.quantile(0.5))
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        cdf = np.cumsum(view.len_probs, axis=1)
+        idx = np.minimum((cdf < 0.5).sum(axis=1), cdf.shape[1] - 1)
+        return view.len_sup[np.arange(cdf.shape[0]), idx]
 
 
 class TRAILPolicy(Policy):
@@ -134,9 +216,20 @@ class TRAILPolicy(Policy):
         remaining = np.maximum(lens - sr.generated, 1.0)
         alive = lens > sr.generated
         if alive.any():
+            # sequential sums so the batched path is bit-identical
             p = probs * alive
-            return float(np.sum(remaining * p) / p.sum())
+            num = np.cumsum(remaining * p)[-1]
+            return float(num / np.cumsum(p)[-1])
         return 1.0  # predicted mass exhausted: completion imminent
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        g = np.asarray(view.generated, np.float64)[:, None]
+        remaining = np.maximum(view.len_sup - g, 1.0)
+        alive = (view.len_sup > g) & (view.len_probs > 0)
+        p = np.where(alive, view.len_probs, 0.0)
+        den = np.cumsum(p, axis=1)[:, -1]
+        num = np.cumsum(remaining * p, axis=1)[:, -1]
+        return np.where(den > 0.0, num / np.where(den > 0.0, den, 1.0), 1.0)
 
 
 class MeanPolicy(Policy):
@@ -149,6 +242,9 @@ class MeanPolicy(Policy):
     def priority(self, sr) -> float:
         return mean_index(sr.cost_dist, sr.attained_cost)
 
+    def priority_batch(self, view, backend) -> np.ndarray:
+        return backend.mean(view.cost_sup, view.cost_probs, view.attained)
+
 
 class GittinsPolicy(Policy):
     """Gittins index computed once at admission (no runtime refresh)."""
@@ -159,6 +255,9 @@ class GittinsPolicy(Policy):
 
     def priority(self, sr) -> float:
         return gittins_index(sr.cost_dist, 0.0)
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        return backend.gittins(view.cost_sup, view.cost_probs, None)
 
 
 class SageSchedPolicy(Policy):
@@ -171,6 +270,9 @@ class SageSchedPolicy(Policy):
 
     def priority(self, sr) -> float:
         return gittins_index(sr.cost_dist, sr.attained_cost)
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        return backend.gittins(view.cost_sup, view.cost_probs, view.attained)
 
 
 class AgedSageSchedPolicy(Policy):
@@ -198,6 +300,23 @@ class AgedSageSchedPolicy(Policy):
         g = gittins_index(sr.cost_dist, sr.attained_cost)
         age = max(0.0, self.now - sr.arrival)
         return g / (1.0 + age / self.tau_age)
+
+    def base_priority(self, sr) -> float:
+        """Undiscounted Gittins index — cached by BatchState so set_now()
+        aging is a pure vectorized discount, no index recomputation."""
+        return gittins_index(sr.cost_dist, sr.attained_cost)
+
+    def base_priority_batch(self, view, backend) -> np.ndarray:
+        return backend.gittins(view.cost_sup, view.cost_probs, view.attained)
+
+    def apply_age(self, base: np.ndarray, arrival: np.ndarray,
+                  now: float) -> np.ndarray:
+        age = np.maximum(0.0, now - np.asarray(arrival, np.float64))
+        return base / (1.0 + age / self.tau_age)
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        return self.apply_age(self.base_priority_batch(view, backend),
+                              view.arrival, self.now)
 
 
 _REGISTRY = {

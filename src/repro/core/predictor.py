@@ -53,11 +53,18 @@ class LengthDistribution:
 
     @property
     def mean(self) -> float:
-        return float(np.sum(self.lengths * self.probs))
+        # sequential (cumsum) summation: keeps SSJF's batched priority
+        # path bit-identical to this scalar oracle (numpy's pairwise
+        # np.sum trees differ between compact and zero-padded arrays)
+        return float(np.cumsum(self.lengths * self.probs)[-1])
 
     def quantile(self, q: float) -> int:
         cdf = np.cumsum(self.probs)
-        return int(self.lengths[int(np.searchsorted(cdf, q))])
+        # float rounding can leave cdf[-1] < q (e.g. 0.9999999998 < 1.0),
+        # in which case searchsorted returns len(cdf) — clip to the last
+        # support point
+        idx = min(int(np.searchsorted(cdf, q)), self.lengths.shape[0] - 1)
+        return int(self.lengths[idx])
 
     def sample(self, rng: np.random.Generator) -> int:
         return int(rng.choice(self.lengths, p=self.probs))

@@ -19,6 +19,21 @@ The scheduler is backend-agnostic: callers ask for ``order()`` over any
 subset of live request ids and apply their own admission constraints
 (KV capacity, max batch) — exactly how vLLM separates policy from the
 block manager.
+
+Array-native hot path
+---------------------
+At cluster scale (Fig. 12) the decision loop dominates: thousands of
+Gittins refreshes per second.  The scheduler therefore keeps all live
+requests in a ``BatchState`` — a structure-of-arrays mirror of the
+per-request objects: bucketized (n, k) cost/length distributions plus
+parallel ``generated`` / ``attained`` / ``arrival`` / ``next_refresh`` /
+``priority`` vectors.  ``on_progress`` only *marks rows dirty*;
+``refresh()`` recomputes every dirty priority in one fused pass through a
+pluggable backend (vectorized numpy, or the Pallas TPU kernel), and
+``order()`` is a single ``np.lexsort`` over the priority/arrival arrays.
+``priority_backend="object"`` preserves the original object-at-a-time
+path as the oracle; the numpy backend is engineered to be bit-identical
+to it (see docs/scheduler_internals.md).
 """
 
 from __future__ import annotations
@@ -28,16 +43,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .cost_model import CostDistribution, CostModel, ResourceBoundCost
+from .backends import BatchView, make_priority_backend
+from .cost_model import (CostDistribution, CostModel, ResourceBoundCost,
+                         bucketize_support)
 from .policies import Policy, SageSchedPolicy
 from .predictor import LengthDistribution, Predictor, SemanticHistoryPredictor
 
-__all__ = ["ScheduledRequest", "Scheduler"]
+__all__ = ["ScheduledRequest", "BatchState", "Scheduler"]
 
 
 @dataclass
 class ScheduledRequest:
-    """Scheduler-side state for one live request."""
+    """Scheduler-side state for one live request.
+
+    Under a batched backend the authoritative copies of ``generated`` /
+    ``attained_cost`` / ``next_refresh`` / ``priority`` live in
+    ``BatchState``; ``Scheduler.get`` syncs them back on access.
+    """
 
     request_id: str
     prompt: str
@@ -52,8 +74,155 @@ class ScheduledRequest:
     noise_rng: np.random.Generator | None = field(default=None, repr=False)
 
 
+class BatchState:
+    """Structure-of-arrays store for all live requests.
+
+    Rows are dense in [0, n); removal swaps the last row into the hole.
+    Columns (k) hold bucketized distributions: support is non-decreasing,
+    padded entries repeat the last real support value and carry prob 0 —
+    a padding every batched consumer treats as exactly inert.  Row
+    capacity doubles amortized; column width auto-grows (power-of-two,
+    capped at ``max_k``) so compression only kicks in past ``max_k``.
+    """
+
+    def __init__(self, k: int = 8, cap: int = 64, max_k: int = 256):
+        self.k = int(k)
+        self.cap = int(cap)
+        self.max_k = int(max_k)
+        self.n = 0
+        self.cost_sup = np.zeros((self.cap, self.k))
+        self.cost_probs = np.zeros((self.cap, self.k))
+        self.len_sup = np.zeros((self.cap, self.k))
+        self.len_probs = np.zeros((self.cap, self.k))
+        self.generated = np.zeros(self.cap, np.int64)
+        self.attained = np.zeros(self.cap)
+        self.arrival = np.zeros(self.cap)
+        self.input_len = np.zeros(self.cap, np.int64)
+        self.next_refresh = np.full(self.cap, np.inf)
+        self.priority = np.zeros(self.cap)
+        self.base_priority = np.zeros(self.cap)
+        self.dirty = np.zeros(self.cap, bool)
+        self.ids: list[str] = []
+        self.index: dict[str, int] = {}
+
+    # ------------------------------------------------------------- growth
+
+    def _grow_rows(self) -> None:
+        new_cap = self.cap * 2
+        for name in ("cost_sup", "cost_probs", "len_sup", "len_probs"):
+            old = getattr(self, name)
+            arr = np.zeros((new_cap, self.k), old.dtype)
+            arr[:self.cap] = old
+            setattr(self, name, arr)
+        for name, fill in (("generated", 0), ("attained", 0.0),
+                           ("arrival", 0.0), ("input_len", 0),
+                           ("next_refresh", np.inf), ("priority", 0.0),
+                           ("base_priority", 0.0), ("dirty", False)):
+            old = getattr(self, name)
+            arr = np.full(new_cap, fill, old.dtype)
+            arr[:self.cap] = old
+            setattr(self, name, arr)
+        self.cap = new_cap
+
+    def _grow_cols(self, k_needed: int) -> None:
+        k_new = self.k
+        while k_new < k_needed:
+            k_new *= 2
+        k_new = min(k_new, self.max_k)
+        if k_new <= self.k:
+            return
+        pad = k_new - self.k
+        for name in ("cost_sup", "len_sup"):
+            # edge-repeat keeps the pad-with-last-support invariant
+            setattr(self, name,
+                    np.pad(getattr(self, name), ((0, 0), (0, pad)),
+                           mode="edge"))
+        for name in ("cost_probs", "len_probs"):
+            setattr(self, name,
+                    np.pad(getattr(self, name), ((0, 0), (0, pad))))
+        self.k = k_new
+
+    # ------------------------------------------------------------ rows
+
+    def add(self, rid: str, cost_dist: CostDistribution,
+            length_dist: LengthDistribution, *, arrival: float,
+            input_len: int, next_refresh: float, priority: float,
+            base_priority: float) -> int:
+        k_needed = max(cost_dist.support.shape[0],
+                       length_dist.lengths.shape[0])
+        if k_needed > self.k:
+            self._grow_cols(k_needed)
+        if self.n == self.cap:
+            self._grow_rows()
+        i = self.n
+        self._write_row(self.cost_sup, self.cost_probs, i,
+                        cost_dist.support, cost_dist.probs)
+        self._write_row(self.len_sup, self.len_probs, i,
+                        length_dist.lengths, length_dist.probs)
+        self.generated[i] = 0
+        self.attained[i] = 0.0
+        self.arrival[i] = arrival
+        self.input_len[i] = input_len
+        self.next_refresh[i] = next_refresh
+        self.priority[i] = priority
+        self.base_priority[i] = base_priority
+        self.dirty[i] = False
+        self.ids.append(rid)
+        self.index[rid] = i
+        self.n += 1
+        return i
+
+    def _write_row(self, sup_arr: np.ndarray, prob_arr: np.ndarray, i: int,
+                   support: np.ndarray, probs: np.ndarray) -> None:
+        """Write one bucketized distribution row in place (no concatenate
+        allocations on the admit hot path)."""
+        k0 = support.shape[0]
+        if k0 <= self.k:
+            sup_arr[i, :k0] = support
+            sup_arr[i, k0:] = support[-1]   # repeat-last pad
+            prob_arr[i, :k0] = probs
+            prob_arr[i, k0:] = 0.0
+        else:  # > max_k: lossy equal-mass compression
+            s, p = bucketize_support(np.asarray(support, np.float64),
+                                     probs, self.k)
+            sup_arr[i] = s
+            prob_arr[i] = p
+
+    def remove(self, rid: str) -> None:
+        i = self.index.pop(rid)
+        last = self.n - 1
+        if i != last:
+            for name in ("cost_sup", "cost_probs", "len_sup", "len_probs",
+                         "generated", "attained", "arrival", "input_len",
+                         "next_refresh", "priority", "base_priority",
+                         "dirty"):
+                arr = getattr(self, name)
+                arr[i] = arr[last]
+            moved = self.ids[last]
+            self.ids[i] = moved
+            self.index[moved] = i
+        self.ids.pop()
+        self.dirty[last] = False
+        self.n -= 1
+
+    def view(self, idx: np.ndarray) -> BatchView:
+        if idx.shape[0] == self.n:
+            idx = slice(0, self.n)  # all rows dirty: zero-copy slices
+        return BatchView(
+            cost_sup=self.cost_sup[idx], cost_probs=self.cost_probs[idx],
+            len_sup=self.len_sup[idx], len_probs=self.len_probs[idx],
+            generated=self.generated[idx], attained=self.attained[idx],
+            arrival=self.arrival[idx], input_len=self.input_len[idx])
+
+
 class Scheduler:
-    """Predictor + cost model + policy, with bucketized priority refresh."""
+    """Predictor + cost model + policy, with bucketized priority refresh.
+
+    priority_backend: "numpy" (default, vectorized float64 hot path),
+        "pallas" (TPU kernel, interpret-mode on CPU), "object" (the
+        original per-request scalar path, kept as the oracle), or a
+        ``PriorityBackend`` instance.
+    """
 
     def __init__(self,
                  predictor: Predictor | None = None,
@@ -62,6 +231,9 @@ class Scheduler:
                  bucket_size: int = 200,
                  noise_weight: float = 0.0,
                  noise_max_len: int = 4096,
+                 priority_backend="numpy",
+                 batch_k: int = 8,
+                 max_batch_k: int = 256,
                  clock=time.monotonic):
         self.predictor = predictor or SemanticHistoryPredictor()
         self.cost_model = cost_model or ResourceBoundCost()
@@ -70,8 +242,12 @@ class Scheduler:
         self.noise_weight = noise_weight  # Fig. 11 robustness experiment
         self.noise_max_len = noise_max_len
         self.clock = clock
+        self.backend = make_priority_backend(priority_backend)
+        self._state = BatchState(k=batch_k, max_k=max_batch_k) \
+            if self.backend is not None else None
         self._live: dict[str, ScheduledRequest] = {}
         self._arrival_seq = 0  # tie-break for identical clock readings
+        self._now = 0.0
         self.stats = {"predictions": 0, "refreshes": 0, "completions": 0}
 
     # ------------------------------------------------------------- lifecycle
@@ -95,44 +271,159 @@ class Scheduler:
             request_id=request_id, prompt=prompt, input_len=input_len,
             arrival=arrival + self._arrival_seq * 1e-9,
             length_dist=length_dist, cost_dist=cost_dist)
-        sr.priority = self.policy.priority(sr)
-        sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
+        pol = self.policy
+        aging = getattr(pol, "time_varying", False) \
+            and hasattr(pol, "base_priority") and hasattr(pol, "apply_age")
+        if self._state is not None and aging:
+            # one index evaluation, not two: derive the discounted
+            # priority from the cached base instead of recomputing
+            base = pol.base_priority(sr)
+            sr.priority = float(pol.apply_age(
+                base, sr.arrival, getattr(pol, "now", self._now)))
+        else:
+            sr.priority = pol.priority(sr)
+            base = sr.priority
+        sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
         self._live[request_id] = sr
+        if self._state is not None:
+            self._state.add(request_id, cost_dist, length_dist,
+                            arrival=sr.arrival, input_len=input_len,
+                            next_refresh=sr.next_refresh,
+                            priority=sr.priority, base_priority=base)
         return sr
 
     def on_progress(self, request_id: str, generated: int) -> None:
-        """Report that ``generated`` output tokens now exist.  Refreshing
-        policies recompute the priority only at their refresh boundaries
-        (cost buckets for SageSched, quantum edges for FastServe)."""
+        """Report that ``generated`` output tokens now exist.  Under a
+        batched backend this only *marks the row dirty* when it crosses
+        its refresh boundary; the recomputation happens wholesale in
+        ``refresh()``.  The object backend keeps the original eager
+        per-request recompute (cost buckets for SageSched, quantum edges
+        for FastServe)."""
         sr = self._live[request_id]
         if generated == sr.generated:
             return
         sr.generated = generated
+        st = self._state
+        if st is not None:
+            i = st.index[request_id]
+            st.generated[i] = generated
+            if self.policy.refreshing and generated >= st.next_refresh[i]:
+                st.dirty[i] = True
+            return
         if self.policy.refreshing and generated >= sr.next_refresh:
             sr.attained_cost = self.cost_model.attained(sr.input_len, generated)
             sr.priority = self.policy.priority(sr)
             sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
             self.stats["refreshes"] += 1
 
+    def on_progress_many(self, request_ids, generated) -> None:
+        """Vectorized ``on_progress`` over parallel id/count sequences:
+        one fancy-indexed write + dirty-mark under a batched backend."""
+        st = self._state
+        if st is None:
+            for rid, g in zip(request_ids, generated):
+                self.on_progress(rid, int(g))
+            return
+        ids = list(request_ids)
+        if not ids:
+            return
+        idx = np.fromiter((st.index[r] for r in ids), np.int64, len(ids))
+        gens = np.asarray(generated, np.int64)
+        st.generated[idx] = gens
+        if self.policy.refreshing:
+            st.dirty[idx] |= gens >= st.next_refresh[idx]
+
+    def refresh(self) -> int:
+        """Recompute every dirty priority in one batched pass.  Returns
+        the number of rows refreshed.  No-op on the object backend (it
+        refreshes eagerly in ``on_progress``)."""
+        st = self._state
+        if st is None or st.n == 0:
+            return 0
+        d = st.dirty[:st.n]
+        if not d.any():
+            return 0
+        idx = np.flatnonzero(d)
+        st.dirty[:st.n] = False
+        pol = self.policy
+        st.attained[idx] = self.cost_model.attained_batch(
+            st.input_len[idx], st.generated[idx])
+        if pol.has_batch:
+            view = st.view(idx)
+            if getattr(pol, "time_varying", False) \
+                    and hasattr(pol, "base_priority_batch"):
+                base = pol.base_priority_batch(view, self.backend)
+                st.base_priority[idx] = base
+                st.priority[idx] = pol.apply_age(base, st.arrival[idx],
+                                                 self._now)
+            else:
+                st.priority[idx] = pol.priority_batch(view, self.backend)
+        else:
+            # scalar fallback: custom policies without a batch path
+            for i in idx:
+                sr = self._live[st.ids[i]]
+                sr.generated = int(st.generated[i])
+                sr.attained_cost = float(st.attained[i])
+                st.priority[i] = pol.priority(sr)
+        if not pol.has_boundary_batch:
+            # custom scalar boundary without a batch override: honor it
+            for i in idx:
+                sr = self._live[st.ids[i]]
+                sr.generated = int(st.generated[i])
+                st.next_refresh[i] = pol.next_boundary(sr, self.bucket_size)
+        else:
+            st.next_refresh[idx] = pol.next_boundary_batch(
+                st.generated[idx], self.bucket_size)
+        self.stats["refreshes"] += int(idx.size)
+        return int(idx.size)
+
     def tokens_to_refresh(self, request_id: str) -> float:
         """Output tokens until this request's next priority refresh
         (simulator fast-forward bound)."""
+        st = self._state
+        if st is not None:
+            self.refresh()
+            i = st.index[request_id]
+            return float(st.next_refresh[i] - st.generated[i])
         sr = self._live[request_id]
         return sr.next_refresh - sr.generated
+
+    def min_tokens_to_refresh(self, request_ids) -> float:
+        """Vectorized min over ``tokens_to_refresh`` (simulator hot path)."""
+        st = self._state
+        if st is None:
+            return min(self.tokens_to_refresh(r) for r in request_ids)
+        self.refresh()
+        idx = np.fromiter((st.index[r] for r in request_ids), np.int64,
+                          len(request_ids))
+        return float(np.min(st.next_refresh[idx] - st.generated[idx]))
 
     def on_complete(self, request_id: str, output_len: int) -> None:
         """Request finished: feed the predictor's history and drop state."""
         sr = self._live.pop(request_id)
         self.predictor.observe(sr.prompt, sr.input_len, output_len)
+        if self._state is not None:
+            self._state.remove(request_id)
         self.stats["completions"] += 1
 
     def on_abort(self, request_id: str) -> None:
-        self._live.pop(request_id, None)
+        if self._live.pop(request_id, None) is not None \
+                and self._state is not None:
+            self._state.remove(request_id)
 
     # ------------------------------------------------------------- queries
 
     def get(self, request_id: str) -> ScheduledRequest:
-        return self._live[request_id]
+        sr = self._live[request_id]
+        st = self._state
+        if st is not None:
+            self.refresh()
+            i = st.index[request_id]
+            sr.generated = int(st.generated[i])
+            sr.priority = float(st.priority[i])
+            sr.attained_cost = float(st.attained[i])
+            sr.next_refresh = float(st.next_refresh[i])
+        return sr
 
     def __contains__(self, request_id: str) -> bool:
         return request_id in self._live
@@ -146,18 +437,88 @@ class Scheduler:
 
     def set_now(self, now: float) -> None:
         """Inject the current (sim or wall) time; time-varying policies
-        (aging) recompute every live priority."""
+        (aging) re-apply their discount — a single vectorized pass under
+        a batched backend, no index recomputation."""
+        self._now = now
         if not getattr(self.policy, "time_varying", False):
             return
         self.policy.now = now
-        for sr in self._live.values():
-            sr.priority = self.policy.priority(sr)
+        st = self._state
+        if st is None:
+            for sr in self._live.values():
+                sr.priority = self.policy.priority(sr)
+            return
+        if not st.n:
+            return
+        self.refresh()
+        pol = self.policy
+        # the vectorized discount is only valid when refresh() maintains
+        # st.base_priority — i.e. the policy has the full batched aging
+        # surface; otherwise the cached base is stale admit-time data
+        if hasattr(pol, "apply_age") and hasattr(pol, "base_priority_batch") \
+                and pol.has_batch:
+            st.priority[:st.n] = pol.apply_age(
+                st.base_priority[:st.n], st.arrival[:st.n], now)
+        else:  # scalar-only time-varying policy: loop the oracle
+            for i in range(st.n):
+                sr = self._live[st.ids[i]]
+                sr.generated = int(st.generated[i])
+                sr.attained_cost = float(st.attained[i])
+                st.priority[i] = pol.priority(sr)
 
-    def order(self, request_ids=None) -> list[str]:
-        """Request ids sorted by priority (smaller first, arrival ties)."""
+    def order(self, request_ids=None, *, running=None,
+              hysteresis: float = 1.0, pin_running: bool = False
+              ) -> list[str]:
+        """Request ids sorted by priority (smaller first, arrival ties).
+
+        running/hysteresis/pin_running implement the callers' admission
+        semantics in one place: ids in ``running`` either get their
+        priority scaled by ``hysteresis`` (preemptive anti-thrashing,
+        Sec. 3.3) or pinned ahead of everything (``pin_running``,
+        non-preemptive engines).  Under a batched backend this is one
+        ``np.lexsort`` over the state arrays.
+        """
+        st = self._state
+        if st is None:
+            return self._order_object(request_ids, running, hysteresis,
+                                      pin_running)
+        self.refresh()
+        if request_ids is None:
+            ids = st.ids[:st.n]
+            prio = st.priority[:st.n].copy()
+            arr = st.arrival[:st.n]
+        else:
+            ids = list(request_ids)
+            idx = np.fromiter((st.index[r] for r in ids), np.int64, len(ids))
+            prio = st.priority[idx]
+            arr = st.arrival[idx]
+        if running:
+            rmask = np.fromiter((r in running for r in ids), bool, len(ids))
+            if pin_running:
+                prio[rmask] = -np.inf
+            else:
+                prio[rmask] *= hysteresis
+        # permute through an object array: ~10x faster than indexing a
+        # python list with numpy int64 scalars at 10k-deep queues
+        id_arr = np.empty(len(ids), object)
+        id_arr[:] = ids
+        return id_arr[np.lexsort((arr, prio))].tolist()
+
+    def _order_object(self, request_ids, running, hysteresis,
+                      pin_running) -> list[str]:
         if request_ids is None:
             srs = list(self._live.values())
         else:
             srs = [self._live[r] for r in request_ids]
-        srs.sort(key=lambda s: (s.priority, s.arrival))
+        if running:
+            if pin_running:
+                srs.sort(key=lambda s: (
+                    (-np.inf, s.arrival) if s.request_id in running
+                    else (s.priority, s.arrival)))
+            else:
+                srs.sort(key=lambda s: (
+                    s.priority * (hysteresis if s.request_id in running
+                                  else 1.0), s.arrival))
+        else:
+            srs.sort(key=lambda s: (s.priority, s.arrival))
         return [s.request_id for s in srs]

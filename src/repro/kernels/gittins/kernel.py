@@ -24,23 +24,30 @@ __all__ = ["gittins_kernel"]
 def _kernel(support_ref, probs_ref, out_ref):
     c = support_ref[...].astype(jnp.float32)       # (bn, k)
     p = probs_ref[...].astype(jnp.float32)
+    valid = p > 0.0
+    # zero dead columns BEFORE multiplying: padded support may be huge
+    # (or even +inf), and inf * 0 would poison the cumsum with NaN
+    cz = jnp.where(valid, c, 0.0)
     mass = jnp.cumsum(p, axis=1)                   # P(X <= c_j)
-    spent = jnp.cumsum(c * p, axis=1)              # E[X ; X <= c_j]
-    num = spent + c * (1.0 - mass)                 # E[min(X, c_j)]
-    ratio = jnp.where(mass > 1e-12, num / jnp.maximum(mass, 1e-12), jnp.inf)
+    spent = jnp.cumsum(cz * p, axis=1)             # E[X ; X <= c_j]
+    num = spent + cz * (1.0 - mass)                # E[min(X, c_j)]
+    ratio = jnp.where(valid & (mass > 1e-12),
+                      num / jnp.maximum(mass, 1e-12), jnp.inf)
     out_ref[...] = ratio.min(axis=1)
 
 
 def gittins_kernel(support, probs, *, block_n: int = 256,
                    interpret: bool = False):
-    """support/probs: (n, k) float32 (rows ascending in support, padded
-    entries must carry prob 0 and support +inf-like large).  Returns (n,)."""
+    """support/probs: (n, k) float32 (rows non-decreasing in support;
+    padded entries must carry prob 0 — any support value is tolerated
+    there, including +inf, but prefer a large finite pad as ops.py
+    does).  Returns (n,)."""
     n, k = support.shape
     bn = min(block_n, n)
     pad = (-n) % bn
     if pad:
         support = jnp.pad(support, ((0, pad), (0, 0)),
-                          constant_values=jnp.inf)
+                          constant_values=1.0)
         probs = jnp.pad(probs, ((0, pad), (0, 0)))
         probs = probs.at[n:, 0].set(1.0)  # harmless rows
     blocks = (n + pad) // bn

@@ -1,15 +1,47 @@
-"""jit'd wrapper for the batched Gittins kernel."""
+"""jit'd wrappers for the batched Gittins kernel.
+
+Two entry points:
+
+  * ``gittins_op``          — plain batched indices over (n, k) rows,
+    API-compatible with the numpy oracle ``gittins_index_batch(s, p)``.
+  * ``gittins_attained_op`` — the scheduler hot-path op: conditions each
+    row on X > attained (the paper's runtime Bayesian refresh) entirely
+    in jnp, then runs the Pallas kernel.  Inputs are padded to
+    power-of-two batch sizes before entering the jitted function, so a
+    scheduler whose queue breathes between, say, 900 and 1000 requests
+    compiles exactly once (for n=1024) instead of on every queue-depth
+    change — the "persistent padding" that makes jit viable in a
+    decision loop.
+
+Ragged rows must be padded with prob 0; this module pads support with a
+large *finite* value (``PAD_SUPPORT``) — never +inf, whose product with
+a zero probability would poison the kernel's cumsum with NaN (the kernel
+also guards against it defensively).
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from .kernel import gittins_kernel
 from .ref import gittins_reference
 
-__all__ = ["gittins_op"]
+__all__ = ["gittins_op", "gittins_attained_op", "PAD_SUPPORT"]
+
+# large finite pad for ragged support rows: big enough to sit above any
+# real cost, small enough that float32 products with ~1 stay finite
+PAD_SUPPORT = 1e30
+
+
+def _next_pow2(n: int) -> int:
+    p = 8
+    while p < n:
+        p *= 2
+    return p
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "force_pallas"))
@@ -20,3 +52,58 @@ def gittins_op(support, probs, *, block_n: int = 256,
         return gittins_reference(support, probs)
     return gittins_kernel(support, probs, block_n=block_n,
                           interpret=not native)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "force_pallas"))
+def _attained_op(support, probs, attained, *, block_n: int,
+                 force_pallas: bool):
+    """Condition rows on X > attained, re-origin, and evaluate.  Mirrors
+    repro.core.gittins._condition_batch in float32/jnp."""
+    c = support.astype(jnp.float32)
+    p = probs.astype(jnp.float32)
+    att = jnp.maximum(attained.astype(jnp.float32), 0.0)
+    valid = p > 0.0
+    cond = (att > 0.0)[:, None]
+    alive = valid & (~cond | (c > att[:, None]))
+    pa = jnp.where(alive, p, 0.0)
+    psum = jnp.sum(pa, axis=1)
+    exhausted = cond[:, 0] & (psum <= 0.0)
+    safe = jnp.where(psum > 0.0, psum, 1.0)
+    pn = jnp.where(cond, pa / safe[:, None], pa)
+    # dead columns get the finite pad support: keeps the kernel NaN-free
+    # and (with prob 0) exactly inert
+    cr = jnp.where(alive, c - att[:, None] * cond, PAD_SUPPORT)
+    idx = gittins_op(cr, pn, block_n=block_n, force_pallas=force_pallas)
+    tail = jnp.maximum(jnp.max(jnp.where(valid, c, -jnp.inf), axis=1), 1.0)
+    return jnp.where(exhausted, tail, idx)
+
+
+def gittins_attained_op(support, probs, attained=None, *, block_n: int = 256,
+                        force_pallas: bool = False):
+    """Scheduler-facing batched Gittins evaluation.
+
+    support/probs: (n, k) bucketized rows (padded entries prob 0).
+    attained: optional (n,) consumed cost per row.
+    Accepts numpy or jax arrays; returns a (n,) jax array.  The batch is
+    padded to the next power of two with harmless rows before the jitted
+    computation, so compilation is persistent across queue-depth jitter.
+    """
+    support = np.asarray(support, np.float32)
+    probs = np.asarray(probs, np.float32)
+    n, k = support.shape
+    if attained is None:
+        attained = np.zeros(n, np.float32)
+    attained = np.asarray(attained, np.float32)
+    n2 = _next_pow2(n)
+    if n2 != n:
+        pad = n2 - n
+        support = np.pad(support, ((0, pad), (0, 0)),
+                         constant_values=PAD_SUPPORT)
+        support[n:, 0] = 1.0
+        probs = np.pad(probs, ((0, pad), (0, 0)))
+        probs[n:, 0] = 1.0          # harmless unit-mass rows
+        attained = np.pad(attained, (0, pad))
+    out = _attained_op(jnp.asarray(support), jnp.asarray(probs),
+                       jnp.asarray(attained), block_n=block_n,
+                       force_pallas=force_pallas)
+    return out[:n]

@@ -9,11 +9,15 @@ __all__ = ["gittins_reference"]
 
 
 def gittins_reference(support, probs):
-    """support/probs: (n, k) -> (n,) Gittins indices."""
+    """support/probs: (n, k) -> (n,) Gittins indices.  Padded entries
+    (prob 0) are masked out, so any finite-or-inf pad support is safe."""
     c = support.astype(jnp.float32)
     p = probs.astype(jnp.float32)
+    valid = p > 0.0
+    cz = jnp.where(valid, c, 0.0)
     mass = jnp.cumsum(p, axis=1)
-    spent = jnp.cumsum(c * p, axis=1)
-    num = spent + c * (1.0 - mass)
-    ratio = jnp.where(mass > 1e-12, num / jnp.maximum(mass, 1e-12), jnp.inf)
+    spent = jnp.cumsum(cz * p, axis=1)
+    num = spent + cz * (1.0 - mass)
+    ratio = jnp.where(valid & (mass > 1e-12),
+                      num / jnp.maximum(mass, 1e-12), jnp.inf)
     return ratio.min(axis=1)

@@ -110,21 +110,22 @@ class ServingEngine:
 
     def _select_running(self) -> list[str]:
         """Scheduler-priority admission under slot + token budget, with
-        hysteresis protecting the current running set."""
+        hysteresis protecting the current running set.  Ranking happens
+        inside the scheduler (one lexsort over BatchState under a batched
+        backend): preemptive policies scale running priorities by the
+        hysteresis factor, non-preemptive ones pin the running set ahead
+        of all waiters."""
         live = [rid for rid, r in self._requests.items() if not r.done]
         if not live:
             return []
-        h = self.preemption_hysteresis if self.scheduler.preemptive else 0.0
         running = set(self._running)
-
-        def key(rid):
-            sr = self.scheduler.get(rid)
-            scale = h if rid in running and self.scheduler.preemptive else 1.0
-            if not self.scheduler.preemptive and rid in running:
-                return (-np.inf, sr.arrival)      # non-preemptive: keep
-            return (sr.priority * scale, sr.arrival)
-
-        order = sorted(live, key=key)
+        if self.scheduler.preemptive:
+            order = self.scheduler.order(
+                live, running=running,
+                hysteresis=self.preemption_hysteresis)
+        else:
+            order = self.scheduler.order(live, running=running,
+                                         pin_running=True)
         selected, used = [], 0
         budget = self.kv.capacity_tokens * (1 - self.kv.watermark)
         for rid in order:

@@ -139,19 +139,16 @@ class NodeSimulator:
         def select_active(prev_active: list[str]) -> list[str]:
             """Greedy admission in scheduler-priority order under the KV
             capacity + max-batch constraints.  Non-preemptive policies keep
-            the previous active set unconditionally."""
+            the previous active set unconditionally.  The ranking itself
+            is one scheduler call — a single np.lexsort over the
+            BatchState arrays under a batched backend (order() refreshes
+            all dirty priorities wholesale first)."""
             if self.scheduler.preemptive:
                 # rank with hysteresis: running requests' priorities are
                 # scaled down so marginal reversals don't trigger swaps
-                h = self.preemption_hysteresis
-                running = set(prev_active)
-                scored = sorted(
-                    live.keys(),
-                    key=lambda rid: (
-                        self.scheduler.get(rid).priority
-                        * (h if rid in running else 1.0),
-                        self.scheduler.get(rid).arrival))
-                candidates = scored
+                candidates = self.scheduler.order(
+                    running=set(prev_active),
+                    hysteresis=self.preemption_hysteresis)
                 active, used = [], 0
             else:
                 active = [r for r in prev_active if r in live]
@@ -221,8 +218,7 @@ class NodeSimulator:
             remaining = [lv.req.true_output_len - lv.generated for lv in batch]
             steps = max(0, min(remaining))
             if self.scheduler.policy.refreshing:
-                to_refresh = min(self.scheduler.tokens_to_refresh(rid)
-                                 for rid in active)
+                to_refresh = self.scheduler.min_tokens_to_refresh(active)
                 if to_refresh > 0 and np.isfinite(to_refresh):
                     steps = min(steps, int(to_refresh))
             B = len(batch)
@@ -277,7 +273,9 @@ class NodeSimulator:
 
             self.now += iter_time
 
-            # progress + completions
+            # progress + completions (progress reported wholesale: one
+            # dirty-mark pass under a batched backend)
+            progressing: list[str] = []
             for rid in active:
                 lv = live[rid]
                 if lv.generated >= lv.req.true_output_len:
@@ -288,7 +286,9 @@ class NodeSimulator:
                     self.scheduler.on_complete(rid, lv.req.true_output_len)
                     del live[rid]
                 else:
-                    self.scheduler.on_progress(rid, lv.generated)
+                    progressing.append(rid)
+            self.scheduler.on_progress_many(
+                progressing, [live[r].generated for r in progressing])
             prev_active = [r for r in active if r in live]
 
         return SimResult(metrics=done, makespan=self.now,

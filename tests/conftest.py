@@ -6,3 +6,11 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The property tests use hypothesis when available; this container doesn't
+# ship it, so fall back to the minimal random-sampling stub in _stubs/
+# (real hypothesis, when installed, wins — it is found first).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))

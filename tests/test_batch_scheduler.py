@@ -1,0 +1,380 @@
+"""Array-native scheduler hot path: batch/scalar parity + BatchState.
+
+Covers the PR-1 acceptance criteria:
+  * every policy's ``priority_batch`` matches its scalar ``priority`` to
+    1e-6 over random distributions and attained costs (numpy backend is
+    in fact bit-identical; pallas is float32-close),
+  * a full NodeSimulator run produces identical SimResult metrics under
+    the object oracle and the batched numpy backend,
+  * BatchState bookkeeping (swap-remove, column growth, bucketize),
+  * the LengthDistribution.quantile clip fix.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchView, LengthDistribution, NumpyPriorityBackend,
+                        POLICY_NAMES, Predictor, ResourceBoundCost,
+                        Scheduler, bucketize_support, gittins_index,
+                        gittins_index_batch, make_policy)
+from repro.core.cost_model import CostDistribution
+from repro.simulator import generate_workload, make_profile, simulate
+
+RNG = np.random.default_rng(0)
+
+
+def random_length_dist(rng, max_k=24, max_len=4000) -> LengthDistribution:
+    k = int(rng.integers(1, max_k + 1))
+    lens = np.sort(rng.choice(np.arange(1, max_len), k, replace=False))
+    return LengthDistribution(lens, rng.dirichlet(np.ones(k)))
+
+
+class PooledPredictor(Predictor):
+    """Deterministic, embedding-free predictor: prompt -> pooled dist."""
+
+    def __init__(self, pool=64, seed=0):
+        rng = np.random.default_rng(seed)
+        self.dists = [random_length_dist(rng) for _ in range(pool)]
+
+    def predict(self, prompt, input_len):
+        return self.dists[zlib.crc32(prompt.encode()) % len(self.dists)]
+
+
+def build_pair(policy_name, n=60, bucket_size=50, seed=3):
+    """Two schedulers (object oracle, numpy batch) fed identical
+    admissions and progress."""
+    rng = np.random.default_rng(seed)
+    scheds = [Scheduler(policy=make_policy(policy_name),
+                        predictor=PooledPredictor(seed=seed),
+                        cost_model=ResourceBoundCost(),
+                        bucket_size=bucket_size, priority_backend=b)
+              for b in ("object", "numpy")]
+    for i in range(n):
+        il = int(rng.integers(1, 2000))
+        for s in scheds:
+            s.admit(f"r{i}", f"prompt-{i % 17}", il, arrival=float(i))
+    for i in range(n):
+        g = int(rng.integers(0, 600))
+        for s in scheds:
+            s.on_progress(f"r{i}", g)
+    for s in scheds:
+        s.set_now(float(n))
+    return scheds
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_priority_batch_matches_scalar(policy_name):
+    """Property: priority_batch == scalar priority to 1e-6 (bit-identical
+    in practice for the numpy backend) for random dists/attained costs."""
+    obj, bat = build_pair(policy_name)
+    ids = [f"r{i}" for i in range(len(obj))]
+    p_obj = np.array([obj.get(r).priority for r in ids])
+    p_bat = np.array([bat.get(r).priority for r in ids])
+    np.testing.assert_allclose(p_bat, p_obj, rtol=1e-6, atol=1e-9)
+    assert obj.order() == bat.order()
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_priority_batch_direct_view(policy_name):
+    """priority_batch evaluated straight on a BatchView equals the scalar
+    oracle on matching ScheduledRequest state."""
+    from repro.core.scheduler import ScheduledRequest
+    pol = make_policy(policy_name)
+    if hasattr(pol, "now"):
+        pol.now = 500.0
+    rng = np.random.default_rng(11)
+    cm = ResourceBoundCost()
+    n, k = 40, 32
+    rows, srs = [], []
+    for i in range(n):
+        ld = random_length_dist(rng)
+        cd = cm.distribution(int(rng.integers(1, 1000)),
+                             ld.lengths, ld.probs)
+        g = int(rng.integers(0, 800))
+        il = int(rng.integers(1, 1000))
+        att = cm.attained(il, g) if rng.random() < 0.7 else 0.0
+        sr = ScheduledRequest(request_id=f"r{i}", prompt="p", input_len=il,
+                              arrival=float(i), length_dist=ld, cost_dist=cd,
+                              generated=g, attained_cost=att)
+        srs.append(sr)
+        rows.append((cd, ld, g, att, il))
+    cost_sup = np.stack([bucketize_support(cd.support, cd.probs, k)[0]
+                         for cd, *_ in rows])
+    cost_probs = np.stack([bucketize_support(cd.support, cd.probs, k)[1]
+                           for cd, *_ in rows])
+    len_sup = np.stack([bucketize_support(
+        ld.lengths.astype(np.float64), ld.probs, k)[0]
+        for _, ld, *_ in rows])
+    len_probs = np.stack([bucketize_support(
+        ld.lengths.astype(np.float64), ld.probs, k)[1]
+        for _, ld, *_ in rows])
+    view = BatchView(
+        cost_sup=cost_sup, cost_probs=cost_probs,
+        len_sup=len_sup, len_probs=len_probs,
+        generated=np.array([r[2] for r in rows], np.int64),
+        attained=np.array([r[3] for r in rows]),
+        arrival=np.arange(n, dtype=np.float64),
+        input_len=np.array([r[4] for r in rows], np.int64))
+    if not pol.has_batch:
+        pytest.skip("policy has no batch path")
+    got = pol.priority_batch(view, NumpyPriorityBackend())
+    want = np.array([pol.priority(sr) for sr in srs])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("policy_name",
+                         ["sagesched", "sagesched_aged", "mean", "trail",
+                          "fastserve"])
+def test_simulator_end_to_end_identical(policy_name):
+    """Full NodeSimulator runs are *identical* (not just close) between
+    the object oracle and the batched numpy backend."""
+    profiles = [make_profile(n) for n in ("sharegpt", "alpaca")]
+    reqs = generate_workload(profiles, 300, rps=10.0, seed=5)
+
+    def run(backend):
+        sched = Scheduler(policy=make_policy(policy_name),
+                          predictor=PooledPredictor(seed=1),
+                          cost_model=ResourceBoundCost(),
+                          priority_backend=backend)
+        return simulate(reqs, sched)
+
+    a, b = run("object"), run("numpy")
+    assert a.makespan == b.makespan
+    assert a.n_iterations == b.n_iterations
+    assert a.n_preemptions == b.n_preemptions
+    assert a.n_evictions == b.n_evictions
+    assert a.scheduler_stats == b.scheduler_stats
+    for m1, m2 in zip(a.metrics, b.metrics):
+        assert m1.request_id == m2.request_id
+        assert m1.ttft == m2.ttft and m1.ttlt == m2.ttlt
+        assert m1.n_preemptions == m2.n_preemptions
+
+
+def test_simulator_1k_seeded_bit_identical():
+    """The acceptance-criterion workload: 1k seeded requests, sagesched,
+    object vs numpy — bit-identical mean TTLT/TTFT and preemptions."""
+    profiles = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+    reqs = generate_workload(profiles, 1000, rps=8.0, seed=7)
+
+    def run(backend):
+        sched = Scheduler(policy=make_policy("sagesched"),
+                          predictor=PooledPredictor(seed=2),
+                          cost_model=ResourceBoundCost(),
+                          priority_backend=backend)
+        return simulate(reqs, sched)
+
+    a, b = run("object"), run("numpy")
+    assert a.mean_ttlt() == b.mean_ttlt()
+    assert a.mean_ttft() == b.mean_ttft()
+    assert a.n_preemptions == b.n_preemptions
+    assert a.scheduler_stats == b.scheduler_stats
+
+
+# ------------------------------------------------------------- BatchState
+
+def test_batchstate_swap_remove_and_growth():
+    sched = Scheduler(predictor=PooledPredictor(), policy=make_policy(
+        "sagesched"), priority_backend="numpy", batch_k=4)
+    st = sched._state
+    for i in range(100):  # forces row growth past cap=64 and col growth
+        sched.admit(f"r{i}", f"prompt-{i}", 10 + i, arrival=float(i))
+    assert st.n == 100
+    assert st.k >= 4
+    # removal swaps the last row in and keeps the index map consistent
+    sched.on_complete("r3", 17)
+    assert "r3" not in sched
+    assert st.n == 99
+    for rid, i in st.index.items():
+        assert st.ids[i] == rid
+        assert st.input_len[i] == sched._live[rid].input_len
+    # ordering still matches the object oracle's semantics after churn
+    ids = sched.order()
+    pr = [sched.get(r).priority for r in ids]
+    assert pr == sorted(pr)
+
+
+def test_bucketize_pad_and_compress():
+    sup = np.array([1.0, 5.0, 9.0])
+    p = np.array([0.2, 0.5, 0.3])
+    s2, p2 = bucketize_support(sup, p, 6)
+    assert s2.shape == (6,)
+    np.testing.assert_allclose(s2[:3], sup)
+    np.testing.assert_allclose(s2[3:], 9.0)  # repeat-last pad
+    np.testing.assert_allclose(p2[:3], p)
+    assert (p2[3:] == 0).all()
+    # padded and raw rows produce the same Gittins index
+    g_raw = gittins_index(CostDistribution(sup, p), 3.0)
+    g_pad = gittins_index_batch(s2[None], p2[None], np.array([3.0]))[0]
+    assert g_raw == g_pad
+    # compression: mass and mean are preserved, support non-decreasing
+    rng = np.random.default_rng(4)
+    sup_big = np.sort(rng.uniform(1, 1e4, 50))
+    p_big = rng.dirichlet(np.ones(50))
+    s3, p3 = bucketize_support(sup_big, p_big, 8)
+    assert s3.shape == (8,) and (np.diff(s3) >= 0).all()
+    assert p3.sum() == pytest.approx(1.0)
+    assert (s3 * p3).sum() == pytest.approx((sup_big * p_big).sum(),
+                                            rel=1e-9)
+
+
+def test_on_progress_many_matches_scalar_calls():
+    a, b = [Scheduler(predictor=PooledPredictor(), policy=make_policy(
+        "sagesched"), priority_backend="numpy", bucket_size=50)
+        for _ in range(2)]
+    for i in range(30):
+        for s in (a, b):
+            s.admit(f"r{i}", f"p{i}", 5, arrival=float(i))
+    gens = [int(g) for g in np.random.default_rng(1).integers(0, 300, 30)]
+    for i, g in enumerate(gens):
+        a.on_progress(f"r{i}", g)
+    b.on_progress_many([f"r{i}" for i in range(30)], gens)
+    assert a.order() == b.order()
+    assert a.stats["refreshes"] == b.stats["refreshes"]
+
+
+def test_gittins_index_batch_attained_matches_scalar():
+    rng = np.random.default_rng(9)
+    n, k = 64, 16
+    sup = np.sort(rng.uniform(1, 1e5, (n, k)), axis=1)
+    probs = rng.dirichlet(np.ones(k), n)
+    att = rng.uniform(0, 1.2e5, n) * (rng.random(n) > 0.25)
+    got = gittins_index_batch(sup, probs, att)
+    for i in range(n):
+        want = gittins_index(CostDistribution(sup[i], probs[i]),
+                             float(att[i]))
+        assert got[i] == want  # bit-identical by construction
+
+
+def test_custom_policy_scalar_fallbacks():
+    """A user policy with only scalar methods (no priority_batch, a
+    custom next_boundary) must behave identically under the batched
+    backend: the scheduler loops the scalar oracle with synced state."""
+    from repro.core import Policy
+
+    class HalfBucket(Policy):
+        name = "halfbucket"
+        preemptive = True
+        refreshing = True
+
+        def priority(self, sr):
+            return float(sr.attained_cost + sr.generated)
+
+        def next_boundary(self, sr, bucket_size):
+            half = bucket_size // 2
+            return (sr.generated // half + 1) * half
+
+    results = []
+    for backend in ("object", "numpy"):
+        s = Scheduler(policy=HalfBucket(), predictor=PooledPredictor(seed=3),
+                      bucket_size=100, priority_backend=backend)
+        for i in range(12):
+            s.admit(f"r{i}", f"p{i}", 10, arrival=float(i))
+        for g in (60, 120):          # crosses the custom 50-boundaries
+            for i in range(12):
+                s.on_progress(f"r{i}", g)
+            s.order()
+        results.append((s.stats["refreshes"], s.order(),
+                        [s.get(f"r{i}").next_refresh for i in range(12)],
+                        [s.get(f"r{i}").priority for i in range(12)]))
+    assert results[0] == results[1]
+
+
+def test_subclass_scalar_override_beats_inherited_batch():
+    """A subclass of a built-in policy that overrides only the scalar
+    ``priority`` must NOT inherit the parent's priority_batch (it would
+    silently disagree); the scheduler falls back to the scalar oracle."""
+    from repro.core.policies import SageSchedPolicy
+
+    class Tweaked(SageSchedPolicy):
+        def priority(self, sr):
+            return 2.0 * super().priority(sr) + sr.arrival
+
+    assert not Tweaked().has_batch
+    results = []
+    for backend in ("object", "numpy"):
+        s = Scheduler(policy=Tweaked(), predictor=PooledPredictor(seed=4),
+                      bucket_size=50, priority_backend=backend)
+        for i in range(10):
+            s.admit(f"r{i}", f"p{i}", 20, arrival=float(i))
+        for i in range(10):
+            s.on_progress(f"r{i}", 120)
+        results.append((s.order(),
+                        [s.get(f"r{i}").priority for i in range(10)]))
+    assert results[0] == results[1]
+
+
+def test_scalar_only_time_varying_policy_ages_correctly():
+    """A time-varying policy with only scalar methods must not have a
+    stale admit-time base discounted by set_now: the scheduler loops the
+    scalar oracle with synced attained/generated."""
+    from repro.core import Policy
+
+    class ScalarAged(Policy):
+        name = "scalar_aged"
+        preemptive = True
+        refreshing = True
+        time_varying = True
+
+        def __init__(self):
+            self.now = 0.0
+
+        def priority(self, sr):
+            return (sr.attained_cost + 1.0) / (1.0 + (self.now - sr.arrival))
+
+        def apply_age(self, base, arrival, now):  # scalar-shaped helper
+            return base / (1.0 + (now - arrival))
+
+        def base_priority(self, sr):
+            return sr.attained_cost + 1.0
+
+    results = []
+    for backend in ("object", "numpy"):
+        s = Scheduler(policy=ScalarAged(), predictor=PooledPredictor(seed=4),
+                      bucket_size=50, priority_backend=backend)
+        for i in range(8):
+            s.admit(f"r{i}", f"p{i}", 30, arrival=float(i))
+        for i in range(8):
+            s.on_progress(f"r{i}", 60 + 10 * i)
+        s.order()            # drain dirtiness (updates attained)
+        s.set_now(100.0)     # must re-age from FRESH attained costs
+        results.append([s.get(f"r{i}").priority for i in range(8)])
+    assert results[0] == results[1]
+
+
+def test_pallas_backend_close_to_oracle():
+    """The jitted Pallas backend (interpret mode on CPU) slots into the
+    same protocol and lands within float32 tolerance of the oracle."""
+    obj = Scheduler(policy=make_policy("sagesched"),
+                    predictor=PooledPredictor(seed=6),
+                    priority_backend="object", bucket_size=50)
+    pal = Scheduler(policy=make_policy("sagesched"),
+                    predictor=PooledPredictor(seed=6),
+                    priority_backend="pallas", bucket_size=50)
+    rng = np.random.default_rng(6)
+    for i in range(40):
+        il = int(rng.integers(1, 1500))
+        obj.admit(f"r{i}", f"p{i % 9}", il, arrival=float(i))
+        pal.admit(f"r{i}", f"p{i % 9}", il, arrival=float(i))
+    for i in range(40):
+        g = int(rng.integers(0, 400))
+        obj.on_progress(f"r{i}", g)
+        pal.on_progress(f"r{i}", g)
+    pal.refresh()
+    p_obj = np.array([obj.get(f"r{i}").priority for i in range(40)])
+    p_pal = np.array([pal.get(f"r{i}").priority for i in range(40)])
+    np.testing.assert_allclose(p_pal, p_obj, rtol=1e-4)
+
+
+# --------------------------------------------------------- quantile clip
+
+def test_quantile_clips_rounding_overflow():
+    """cdf[-1] can round below q (e.g. seven 1/7 buckets); searchsorted
+    then returns k — the index must clip instead of raising."""
+    k = 7
+    d = LengthDistribution(np.arange(1, k + 1),
+                           np.full(k, 1.0 / k))
+    assert float(np.cumsum(d.probs)[-1]) < 1.0  # the failure precondition
+    assert d.quantile(1.0) == k                 # was: IndexError
+    assert d.quantile(0.5) == 4

@@ -12,7 +12,8 @@ from repro.kernels.decode_attention.ops import decode_attention_op
 from repro.kernels.decode_attention.ref import decode_attention_reference
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
-from repro.kernels.gittins.ops import gittins_op
+from repro.kernels.gittins.ops import (PAD_SUPPORT, gittins_attained_op,
+                                       gittins_op)
 from repro.kernels.ssd_scan.ops import ssd_scan_op
 from repro.kernels.ssd_scan.ref import ssd_reference
 from repro.models.ssm import ssd_chunked
@@ -103,6 +104,39 @@ def test_gittins_kernel_vs_numpy(n, k):
     got = gittins_op(jnp.asarray(sup), jnp.asarray(probs), force_pallas=True)
     want = gittins_index_batch(sup, probs)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("pad_value", [np.inf, PAD_SUPPORT])
+def test_gittins_kernel_ragged_padding_no_nan(pad_value):
+    """Regression: padded columns (prob 0) used to poison the cumsum with
+    inf * 0 = NaN.  The kernel must stay finite and match the oracle for
+    both +inf and large-finite pads."""
+    rng = np.random.default_rng(21)   # own rng: order-independent data
+    n, k_real, k = 33, 6, 16
+    sup = np.sort(rng.uniform(1, 1e5, (n, k_real)), axis=1)
+    probs = rng.dirichlet(np.ones(k_real), n)
+    sup_p = np.pad(sup, ((0, 0), (0, k - k_real)),
+                   constant_values=pad_value).astype(np.float32)
+    probs_p = np.pad(probs, ((0, 0), (0, k - k_real))).astype(np.float32)
+    got = np.asarray(gittins_op(jnp.asarray(sup_p), jnp.asarray(probs_p),
+                                force_pallas=True))
+    assert np.isfinite(got).all()
+    want = gittins_index_batch(sup, probs)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_gittins_attained_op_matches_numpy():
+    """The scheduler-facing op (pow2 persistent padding + conditioning)
+    agrees with the float64 oracle, including exhausted rows."""
+    rng = np.random.default_rng(22)   # own rng: order-independent data
+    n, k = 100, 12
+    sup = np.sort(rng.uniform(1, 1e5, (n, k)), axis=1)
+    probs = rng.dirichlet(np.ones(k), n)
+    att = rng.uniform(0, 2e5, n) * (rng.random(n) > 0.3)  # some exhausted
+    got = np.asarray(gittins_attained_op(sup, probs, att,
+                                         force_pallas=True))
+    want = gittins_index_batch(sup, probs, att)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
 
 
 def test_flash_kernel_jit_composes():
