@@ -13,10 +13,19 @@ vectorized BatchState path (bit-identical results); pallas runs the
 Gittins kernel (interpret-mode off-TPU, so only meaningful as a hot path
 on real hardware — enable with --backends ...,pallas).
 
+A second sweep measures the *cluster* decision path (paper Fig. 12): one
+central scheduler in front of 1→64 nodes at 8 RPS/node, standing queue
+scaled with load — per-arrival predict and schedule (cluster-wide batched
+refresh + node-masked order) wall-clock through
+``repro.simulator.measure_scheduler_overhead``.  The headline acceptance
+metric is *sublinearity*: schedule-stage cost divided by node count must
+shrink as the cluster grows (the refresh is one fused array pass, not 64
+per-node loops).
+
 Emits BENCH_scheduler.json (repo root by default) so future PRs can
 track the trajectory.
 
-    PYTHONPATH=src python benchmarks/bench_scheduler.py [--quick]
+    PYTHONPATH=src python benchmarks/bench_scheduler.py [--quick|--smoke]
 """
 
 from __future__ import annotations
@@ -106,14 +115,62 @@ def bench_one(backend: str, depth: int, *, policy: str = "sagesched",
     }
 
 
+def bench_cluster(nodes: list[int], backends: list[str],
+                  n_probe: int, pallas_probe: int = 5) -> list[dict]:
+    """Fig. 12 cluster sweep: central-scheduler per-arrival overhead at
+    1→64 nodes through the real batched path (shared BatchState admit,
+    cluster-wide refresh, node-masked order)."""
+    from repro.simulator import measure_scheduler_overhead
+
+    rows = []
+    for backend in backends:
+        probes = pallas_probe if backend == "pallas" else n_probe
+        for n in nodes:
+            o = measure_scheduler_overhead(n, n_probe=probes,
+                                           backend=backend)
+            rows.append(o)
+            print(f"cluster {backend:>7s} nodes={n:>3d} "
+                  f"depth={o['queue_depth']:>5d}  "
+                  f"predict={o['predict_ms']:.3f} ms  "
+                  f"schedule={o['schedule_ms']:.3f} ms")
+    return rows
+
+
+def _sublinearity(rows: list[dict]) -> dict:
+    """schedule_ms growth vs node-count growth per backend; < 1 means the
+    central refresh scales sublinearly in cluster size (the acceptance
+    criterion for the shared-BatchState design)."""
+    out = {}
+    for backend in {r["backend"] for r in rows}:
+        sub = sorted((r for r in rows if r["backend"] == backend),
+                     key=lambda r: r["n_nodes"])
+        lo, hi = sub[0], sub[-1]
+        if hi["n_nodes"] > lo["n_nodes"]:
+            growth = hi["schedule_ms"] / max(lo["schedule_ms"], 1e-9)
+            out[backend] = {
+                "nodes": [lo["n_nodes"], hi["n_nodes"]],
+                "schedule_ms": [lo["schedule_ms"], hi["schedule_ms"]],
+                "growth": growth,
+                "per_node": growth / (hi["n_nodes"] / lo["n_nodes"]),
+            }
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="small depths + fewer reps (CI smoke)")
+                    help="small depths + fewer reps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: --quick depths + tiny cluster sweep")
     ap.add_argument("--depths", default=None,
                     help="comma-separated queue depths")
     ap.add_argument("--backends", default="object,numpy",
                     help="comma-separated: object,numpy,pallas")
+    ap.add_argument("--cluster-nodes", default=None,
+                    help="comma-separated node counts for the cluster "
+                         "sweep (default 1,4,16,64; empty string skips)")
+    ap.add_argument("--cluster-backends", default="numpy,pallas",
+                    help="backends for the cluster sweep")
     ap.add_argument("--policy", default="sagesched")
     ap.add_argument("--bucket-size", type=int, default=200)
     ap.add_argument("--reps", type=int, default=None)
@@ -121,11 +178,12 @@ def main(argv=None) -> dict:
                                          / "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
 
+    quick = args.quick or args.smoke
     if args.depths:
         depths = [int(d) for d in args.depths.split(",")]
     else:
-        depths = [100, 1000] if args.quick else [100, 1000, 10000]
-    reps = args.reps or (2 if args.quick else 3)
+        depths = [100, 1000] if quick else [100, 1000, 10000]
+    reps = args.reps or (2 if quick else 3)
     backends = args.backends.split(",")
 
     results = []
@@ -154,6 +212,25 @@ def main(argv=None) -> dict:
                   f"{speedup[str(depth)]['refresh']:.1f}x refresh, "
                   f"{speedup[str(depth)]['order']:.1f}x order")
 
+    if args.cluster_nodes == "":
+        nodes = []
+    elif args.cluster_nodes:
+        nodes = [int(n) for n in args.cluster_nodes.split(",")]
+    else:
+        nodes = [1, 8] if quick else [1, 4, 16, 64]
+    cluster_rows = []
+    sublinearity = {}
+    if nodes:
+        cluster_rows = bench_cluster(
+            nodes, args.cluster_backends.split(","),
+            n_probe=10 if quick else 100,
+            pallas_probe=3 if quick else 5)
+        sublinearity = _sublinearity(cluster_rows)
+        for backend, s in sublinearity.items():
+            print(f"cluster sublinearity [{backend}]: schedule cost "
+                  f"x{s['growth']:.2f} over x{s['nodes'][1] // s['nodes'][0]}"
+                  f" nodes ({s['per_node']:.3f} per-node ratio)")
+
     payload = {
         "bench": "scheduler_decision_throughput",
         "policy": args.policy,
@@ -161,6 +238,11 @@ def main(argv=None) -> dict:
         "reps": reps,
         "results": results,
         "speedup_numpy_vs_object": speedup,
+        "cluster": {
+            "rps_per_node": 8.0,
+            "results": cluster_rows,
+            "sublinearity": sublinearity,
+        },
     }
     Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.out}")
@@ -183,6 +265,12 @@ def run(quick: bool = False):
     for depth, s in payload["speedup_numpy_vs_object"].items():
         rows.append((f"scheduler.speedup_{depth}.refresh",
                      round(s["refresh"], 2), "x_vs_object"))
+    for r in payload["cluster"]["results"]:
+        tag = f"scheduler.cluster_{r['backend']}_n{r['n_nodes']}"
+        rows.append((f"{tag}.schedule_ms", round(r["schedule_ms"], 3), "ms"))
+    for backend, s in payload["cluster"]["sublinearity"].items():
+        rows.append((f"scheduler.cluster_{backend}.per_node_ratio",
+                     round(s["per_node"], 4), "lt1_is_sublinear"))
     emit(rows)
     return rows
 

@@ -1,0 +1,60 @@
+"""Cluster-scale central scheduling demo (paper Sec. 4.4 topology).
+
+One shared-BatchState SageSched scheduler in front of N simulated
+serving nodes, with pluggable request routing:
+
+  * jsow — join-shortest-outstanding-work on the fixed admission-time
+           token guess (the Llumnix-style baseline);
+  * cost — predicted CostDistribution means + per-node KV headroom
+           (uncertainty-aware placement).
+
+Also prints the Fig. 12 overhead probe: per-request predict / schedule
+wall-clock of the central scheduler at the same node count.
+
+    PYTHONPATH=src python examples/cluster_demo.py [--nodes 4] [--n 400]
+"""
+
+import argparse
+
+from repro.core import Scheduler, SemanticHistoryPredictor, make_policy
+from repro.simulator import (generate_workload, make_profile,
+                             measure_scheduler_overhead, simulate_cluster)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--rps-per-node", type=float, default=8.0)
+    ap.add_argument("--policy", default="sagesched")
+    args = ap.parse_args()
+
+    profiles = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+    reqs = generate_workload(profiles, args.n,
+                             rps=args.rps_per_node * args.nodes, seed=0)
+
+    print(f"{args.n} requests, {args.nodes} nodes, "
+          f"{args.rps_per_node * args.nodes:.0f} RPS aggregate, "
+          f"policy={args.policy}\n")
+    print(f"{'router':>6s} {'mean TTLT':>10s} {'mean TTFT':>10s} "
+          f"{'requests/node':>24s}")
+    for router in ("jsow", "cost"):
+        predictor = SemanticHistoryPredictor()
+        res = simulate_cluster(
+            reqs,
+            lambda: Scheduler(policy=make_policy(args.policy),
+                              predictor=predictor),
+            args.nodes, router=router)
+        print(f"{router:>6s} {res.mean_ttlt:9.2f}s {res.mean_ttft:9.2f}s "
+              f"{str(res.requests_per_node):>24s}")
+
+    print("\ncentral-scheduler overhead (Fig. 12 probe, numpy backend):")
+    o = measure_scheduler_overhead(args.nodes, n_probe=50,
+                                   history_size=2000)
+    print(f"  queue depth {o['queue_depth']}, "
+          f"predict {o['predict_ms']:.3f} ms, "
+          f"schedule {o['schedule_ms']:.3f} ms per request")
+
+
+if __name__ == "__main__":
+    main()

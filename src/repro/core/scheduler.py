@@ -71,6 +71,7 @@ class ScheduledRequest:
     attained_cost: float = 0.0    # cost consumed so far (cost-model units)
     next_refresh: float = float("inf")  # generated count of next refresh
     priority: float = 0.0         # cached policy priority (smaller = sooner)
+    node_id: int = -1             # serving node (cluster mode; -1 = unassigned)
     noise_rng: np.random.Generator | None = field(default=None, repr=False)
 
 
@@ -101,6 +102,8 @@ class BatchState:
         self.next_refresh = np.full(self.cap, np.inf)
         self.priority = np.zeros(self.cap)
         self.base_priority = np.zeros(self.cap)
+        self.node_id = np.full(self.cap, -1, np.int64)
+        self.cost_mean = np.zeros(self.cap)
         self.dirty = np.zeros(self.cap, bool)
         self.ids: list[str] = []
         self.index: dict[str, int] = {}
@@ -117,7 +120,8 @@ class BatchState:
         for name, fill in (("generated", 0), ("attained", 0.0),
                            ("arrival", 0.0), ("input_len", 0),
                            ("next_refresh", np.inf), ("priority", 0.0),
-                           ("base_priority", 0.0), ("dirty", False)):
+                           ("base_priority", 0.0), ("node_id", -1),
+                           ("cost_mean", 0.0), ("dirty", False)):
             old = getattr(self, name)
             arr = np.full(new_cap, fill, old.dtype)
             arr[:self.cap] = old
@@ -147,7 +151,7 @@ class BatchState:
     def add(self, rid: str, cost_dist: CostDistribution,
             length_dist: LengthDistribution, *, arrival: float,
             input_len: int, next_refresh: float, priority: float,
-            base_priority: float) -> int:
+            base_priority: float, node_id: int = -1) -> int:
         k_needed = max(cost_dist.support.shape[0],
                        length_dist.lengths.shape[0])
         if k_needed > self.k:
@@ -166,6 +170,8 @@ class BatchState:
         self.next_refresh[i] = next_refresh
         self.priority[i] = priority
         self.base_priority[i] = base_priority
+        self.node_id[i] = node_id
+        self.cost_mean[i] = cost_dist.mean
         self.dirty[i] = False
         self.ids.append(rid)
         self.index[rid] = i
@@ -195,7 +201,7 @@ class BatchState:
             for name in ("cost_sup", "cost_probs", "len_sup", "len_probs",
                          "generated", "attained", "arrival", "input_len",
                          "next_refresh", "priority", "base_priority",
-                         "dirty"):
+                         "node_id", "cost_mean", "dirty"):
                 arr = getattr(self, name)
                 arr[i] = arr[last]
             moved = self.ids[last]
@@ -253,16 +259,25 @@ class Scheduler:
     # ------------------------------------------------------------- lifecycle
 
     def admit(self, request_id: str, prompt: str, input_len: int,
-              arrival: float | None = None) -> ScheduledRequest:
-        """Register an arriving request: predict, cost, prioritize."""
+              arrival: float | None = None,
+              node_id: int = -1, length_dist=None) -> ScheduledRequest:
+        """Register an arriving request: predict, cost, prioritize.
+
+        ``node_id`` tags the request with its serving node (cluster mode,
+        see repro.simulator.cluster); ``order(node_id=...)`` then ranks
+        one node's queue as a masked lexsort over the shared state.
+        ``length_dist`` short-circuits the predictor with an already-
+        computed prediction (e.g. the cost-aware router's route-time
+        lookup) so the semantic-history search is not paid twice."""
         if request_id in self._live:
             raise KeyError(f"request {request_id!r} already admitted")
         arrival = self.clock() if arrival is None else arrival
-        length_dist = self.predictor.predict(prompt, input_len)
+        if length_dist is None:
+            length_dist = self.predictor.predict(prompt, input_len)
+            self.stats["predictions"] += 1
         if self.noise_weight > 0.0:
             length_dist = length_dist.mix_uniform(self.noise_weight,
                                                   self.noise_max_len)
-        self.stats["predictions"] += 1
         cost_dist = self.cost_model.distribution(
             input_len, length_dist.lengths, length_dist.probs)
         # encode arrival order into the float so FCFS ties stay stable
@@ -270,7 +285,7 @@ class Scheduler:
         sr = ScheduledRequest(
             request_id=request_id, prompt=prompt, input_len=input_len,
             arrival=arrival + self._arrival_seq * 1e-9,
-            length_dist=length_dist, cost_dist=cost_dist)
+            length_dist=length_dist, cost_dist=cost_dist, node_id=node_id)
         pol = self.policy
         aging = getattr(pol, "time_varying", False) \
             and hasattr(pol, "base_priority") and hasattr(pol, "apply_age")
@@ -289,8 +304,41 @@ class Scheduler:
             self._state.add(request_id, cost_dist, length_dist,
                             arrival=sr.arrival, input_len=input_len,
                             next_refresh=sr.next_refresh,
-                            priority=sr.priority, base_priority=base)
+                            priority=sr.priority, base_priority=base,
+                            node_id=node_id)
         return sr
+
+    def assign_node(self, request_id: str, node_id: int) -> None:
+        """(Re-)bind a live request to a serving node — the router's write
+        path (initial placement, or migration between nodes)."""
+        sr = self._live[request_id]
+        sr.node_id = node_id
+        if self._state is not None:
+            self._state.node_id[self._state.index[request_id]] = node_id
+
+    def outstanding_by_node(self, n_nodes: int) -> np.ndarray:
+        """(n_nodes,) predicted *remaining* cost per node: one masked
+        bincount over the shared state (admission-time cost mean minus
+        attained cost, floored at 0).  Rows with ``node_id`` outside
+        [0, n_nodes) — unassigned requests — are excluded.  This is the
+        cluster-introspection surface (load dashboards, migration
+        policies); ``CostAwareRouter`` keeps its own admit-time
+        accounting instead, so routing decisions stay identical between
+        shared-state and per-node-fanout modes and cover requests that
+        are routed but not yet admitted."""
+        st = self._state
+        if st is None:
+            out = np.zeros(n_nodes)
+            for sr in self._live.values():
+                if 0 <= sr.node_id < n_nodes:
+                    out[sr.node_id] += max(
+                        sr.cost_dist.mean - sr.attained_cost, 0.0)
+            return out
+        self.refresh()
+        nid = st.node_id[:st.n]
+        ok = (nid >= 0) & (nid < n_nodes)
+        rem = np.maximum(st.cost_mean[:st.n] - st.attained[:st.n], 0.0)
+        return np.bincount(nid[ok], weights=rem[ok], minlength=n_nodes)
 
     def on_progress(self, request_id: str, generated: int) -> None:
         """Report that ``generated`` output tokens now exist.  Under a
@@ -467,8 +515,8 @@ class Scheduler:
                 st.priority[i] = pol.priority(sr)
 
     def order(self, request_ids=None, *, running=None,
-              hysteresis: float = 1.0, pin_running: bool = False
-              ) -> list[str]:
+              hysteresis: float = 1.0, pin_running: bool = False,
+              node_id: int | None = None) -> list[str]:
         """Request ids sorted by priority (smaller first, arrival ties).
 
         running/hysteresis/pin_running implement the callers' admission
@@ -477,13 +525,22 @@ class Scheduler:
         Sec. 3.3) or pinned ahead of everything (``pin_running``,
         non-preemptive engines).  Under a batched backend this is one
         ``np.lexsort`` over the state arrays.
+
+        node_id restricts the ranking to one serving node's requests — a
+        masked lexsort over the cluster-shared state (ignored when
+        ``request_ids`` is given explicitly).
         """
         st = self._state
         if st is None:
             return self._order_object(request_ids, running, hysteresis,
-                                      pin_running)
+                                      pin_running, node_id)
         self.refresh()
-        if request_ids is None:
+        if request_ids is None and node_id is not None:
+            nidx = np.flatnonzero(st.node_id[:st.n] == node_id)
+            ids = [st.ids[i] for i in nidx]
+            prio = st.priority[nidx]
+            arr = st.arrival[nidx]
+        elif request_ids is None:
             ids = st.ids[:st.n]
             prio = st.priority[:st.n].copy()
             arr = st.arrival[:st.n]
@@ -505,9 +562,10 @@ class Scheduler:
         return id_arr[np.lexsort((arr, prio))].tolist()
 
     def _order_object(self, request_ids, running, hysteresis,
-                      pin_running) -> list[str]:
+                      pin_running, node_id=None) -> list[str]:
         if request_ids is None:
-            srs = list(self._live.values())
+            srs = [sr for sr in self._live.values()
+                   if node_id is None or sr.node_id == node_id]
         else:
             srs = [self._live[r] for r in request_ids]
         if running:

@@ -61,7 +61,11 @@ def gqa_attention(q, k, v, *, causal: bool = True, window: int = 0,
     def step(carry, xs):
         m, l, acc = carry            # (B,Sq,H), (B,Sq,H), (B,Sq,H,dh)
         kb, vb, kp = xs              # (B,blk,H,dh), (B,blk,H,dh), (blk,)
-        scores = jnp.einsum("bshd,bthd->bsth", q, kb).astype(jnp.float32)
+        # f32 accumulation (not bf16-rounded-then-upcast): the decode path
+        # accumulates scores in f32, and any systematic rounding gap
+        # between the two paths is amplified by discrete MoE routing
+        scores = jnp.einsum("bshd,bthd->bsth", q, kb,
+                            preferred_element_type=jnp.float32)
         scores = scores * scale      # (B,Sq,blk,H)
         mask = jnp.ones((sq, blk), bool)
         if causal:
@@ -75,7 +79,7 @@ def gqa_attention(q, k, v, *, causal: bool = True, window: int = 0,
         corr = jnp.exp(m - m_new)
         l_new = l * corr + p.sum(axis=2)
         acc_new = acc * corr[..., None] + jnp.einsum(
-            "bsth,bthd->bshd", p, vb.astype(jnp.float32))
+            "bsth,bthd->bshd", p, vb, preferred_element_type=jnp.float32)
         return (m_new, l_new, acc_new), None
 
     m0 = jnp.full((b, sq, h), _NEG, jnp.float32)
@@ -128,7 +132,12 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
         # ring buffer: every slot holds one of the last `window` tokens
         valid = valid | (cache_len[:, None] >= s_max)
     scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
-    p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bqkrs,bskd->bqkrd", p.astype(v_cache.dtype), v_cache,
+    # unnormalized-exp then late divide, mirroring gqa_attention's online
+    # softmax step for step-parity with the prefill/full-forward path:
+    # p stays f32 into the value contraction, normalizer applied last
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p, v_cache,
                      preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
     return out.reshape(b, 1, h, dh).astype(q.dtype)

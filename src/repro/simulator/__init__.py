@@ -1,6 +1,8 @@
 """Discrete-event serving simulator (paper Sec. 4 evaluation vehicle)."""
 
-from .cluster import (ClusterResult, measure_scheduler_overhead,
+from .cluster import (ClusterResult, ClusterScheduler, CostAwareRouter,
+                      JoinShortestWorkRouter, NodeSchedulerView, Router,
+                      ROUTER_NAMES, make_router, measure_scheduler_overhead,
                       simulate_cluster)
 from .service_model import (NodeSpec, ServiceModel, a40_llama8b,
                             h800_qwen32b, tpu_v5e_pod8_32b)
@@ -9,7 +11,9 @@ from .workload import (DATASET_NAMES, DatasetProfile, SemanticCluster,
                        SimRequest, generate_workload, make_profile)
 
 __all__ = [
-    "ClusterResult", "measure_scheduler_overhead", "simulate_cluster",
+    "ClusterResult", "ClusterScheduler", "CostAwareRouter",
+    "JoinShortestWorkRouter", "NodeSchedulerView", "Router", "ROUTER_NAMES",
+    "make_router", "measure_scheduler_overhead", "simulate_cluster",
     "NodeSpec", "ServiceModel", "a40_llama8b", "h800_qwen32b",
     "tpu_v5e_pod8_32b", "NodeSimulator", "RequestMetrics",
     "SimResult", "simulate", "DATASET_NAMES", "DatasetProfile",

@@ -16,6 +16,25 @@ completion, priority-refresh boundary, capacity exhaustion) the active set
 is constant, so whole decode runs advance in one closed-form step
 (ServiceModel.decode_run_time).  This makes 10k-request × 8-policy sweeps
 tractable on one CPU while remaining iteration-exact in time accounting.
+
+Incremental stepping (cluster mode)
+-----------------------------------
+``NodeSimulator`` is an *incrementally steppable* engine: arrivals are
+fed through ``push()`` (non-decreasing arrival order), one scheduling
+round runs per ``step()``, and ``finish()`` collects the ``SimResult``.
+The classic one-shot ``run()`` is literally push-everything + step-until-
+drained, so a standalone node and a node inside the event-driven cluster
+loop (repro.simulator.cluster) execute the same rounds.  ``step()`` takes
+a ``horizon`` — the next cluster-global arrival time — so a node never
+fast-forwards a decode run past a routing decision it hasn't seen; with a
+single node the horizon is its own next arrival, which reproduces the
+original monolithic loop exactly.
+
+The ``scheduler`` handed to a NodeSimulator is either a real
+``repro.core.Scheduler`` (standalone) or a per-node
+``NodeSchedulerView`` over the cluster-shared scheduler (then parameter-
+less ``order()`` calls become node-masked lexsorts over the shared
+BatchState).
 """
 
 from __future__ import annotations
@@ -41,6 +60,7 @@ class RequestMetrics:
     ttft: float = float("nan")   # time to first token (s)
     ttlt: float = float("nan")   # time to last token (s)
     n_preemptions: int = 0
+    node_id: int = -1            # serving node (cluster mode)
 
     @property
     def tpot(self) -> float:
@@ -91,12 +111,14 @@ class _Live:
 
 
 class NodeSimulator:
-    """One serving node driven by a repro.core.Scheduler."""
+    """One serving node driven by a repro.core.Scheduler (or a per-node
+    view over a cluster-shared one)."""
 
     def __init__(self, scheduler: Scheduler,
                  spec: NodeSpec | None = None,
                  admit_headroom: float = 0.95,
-                 preemption_hysteresis: float = 0.5):
+                 preemption_hysteresis: float = 0.5,
+                 node_id: int = -1):
         self.scheduler = scheduler
         self.model = ServiceModel(spec or NodeSpec())
         self.admit_headroom = admit_headroom
@@ -105,197 +127,235 @@ class NodeSimulator:
         # the anti-thrashing counterpart of the paper's bucketized refresh
         # (Sec. 3.3: "thrashing risk ... may frequently reverse").
         self.preemption_hysteresis = preemption_hysteresis
+        self.node_id = node_id
         self.now = 0.0
         self.n_iterations = 0
         self.n_preemptions = 0
         self.n_evictions = 0
+        self._cap = int(self.model.spec.kv_capacity_tokens
+                        * self.admit_headroom)
+        self._pending: list[SimRequest] = []   # routed, not yet admitted
+        self._next = 0                         # index into _pending
+        self._live: dict[str, _Live] = {}
+        self._done: list[RequestMetrics] = []
+        self._prev_active: list[str] = []
 
-    # ------------------------------------------------------------------ run
+    # ----------------------------------------------------------- feeding
 
-    def run(self, requests: list[SimRequest]) -> SimResult:
-        requests = sorted(requests, key=lambda r: r.arrival)
-        arrivals = [r.arrival for r in requests]
-        next_arrival = 0  # index into `requests`
-        live: dict[str, _Live] = {}
-        done: list[RequestMetrics] = []
-        cap = int(self.model.spec.kv_capacity_tokens * self.admit_headroom)
+    @property
+    def busy(self) -> bool:
+        """True while this node still has admitted or pending work."""
+        return self._next < len(self._pending) or bool(self._live)
+
+    def push(self, r: SimRequest) -> None:
+        """Feed one arrival (callers must push in arrival order — the
+        cluster loop routes at global arrival times, so this holds)."""
+        self._pending.append(r)
+
+    # ------------------------------------------------------------- round
+
+    def _admit_arrivals(self) -> None:
+        while (self._next < len(self._pending)
+               and self._pending[self._next].arrival <= self.now + 1e-12):
+            r = self._pending[self._next]
+            self._next += 1
+            self.scheduler.admit(r.request_id, r.prompt, r.input_len,
+                                 arrival=r.arrival)
+            self._live[r.request_id] = _Live(
+                req=r,
+                metrics=RequestMetrics(
+                    request_id=r.request_id, dataset=r.dataset,
+                    arrival=r.arrival, input_len=r.input_len,
+                    output_len=r.true_output_len, node_id=self.node_id))
+
+    def _select_active(self, prev_active: list[str]) -> list[str]:
+        """Greedy admission in scheduler-priority order under the KV
+        capacity + max-batch constraints.  Non-preemptive policies keep
+        the previous active set unconditionally.  The ranking itself
+        is one scheduler call — a single np.lexsort over the
+        BatchState arrays under a batched backend (order() refreshes
+        all dirty priorities wholesale first)."""
+        live = self._live
         max_batch = self.model.spec.max_batch
-
-        def admit_arrivals() -> None:
-            nonlocal next_arrival
-            while (next_arrival < len(requests)
-                   and requests[next_arrival].arrival <= self.now + 1e-12):
-                r = requests[next_arrival]
-                next_arrival += 1
-                self.scheduler.admit(r.request_id, r.prompt, r.input_len,
-                                     arrival=r.arrival)
-                live[r.request_id] = _Live(
-                    req=r,
-                    metrics=RequestMetrics(
-                        request_id=r.request_id, dataset=r.dataset,
-                        arrival=r.arrival, input_len=r.input_len,
-                        output_len=r.true_output_len))
-
-        def select_active(prev_active: list[str]) -> list[str]:
-            """Greedy admission in scheduler-priority order under the KV
-            capacity + max-batch constraints.  Non-preemptive policies keep
-            the previous active set unconditionally.  The ranking itself
-            is one scheduler call — a single np.lexsort over the
-            BatchState arrays under a batched backend (order() refreshes
-            all dirty priorities wholesale first)."""
-            if self.scheduler.preemptive:
-                # rank with hysteresis: running requests' priorities are
-                # scaled down so marginal reversals don't trigger swaps
-                candidates = self.scheduler.order(
-                    running=set(prev_active),
-                    hysteresis=self.preemption_hysteresis)
-                active, used = [], 0
-            else:
-                active = [r for r in prev_active if r in live]
-                used = sum(live[r].kv_if_resident for r in active)
-                waiting = [r for r in live if r not in set(active)]
-                candidates = self.scheduler.order(waiting)
-            for rid in candidates:
-                if rid in active or len(active) >= max_batch:
-                    continue
-                need = live[rid].kv_if_resident
-                if used + need <= cap:
-                    active.append(rid)
-                    used += need
-            return active
-
-        prev_active: list[str] = []
-        while next_arrival < len(requests) or live:
-            admit_arrivals()
-            self.scheduler.set_now(self.now)
-            if not live:
-                self.now = max(self.now, requests[next_arrival].arrival)
+        if self.scheduler.preemptive:
+            # rank with hysteresis: running requests' priorities are
+            # scaled down so marginal reversals don't trigger swaps
+            candidates = self.scheduler.order(
+                running=set(prev_active),
+                hysteresis=self.preemption_hysteresis)
+            active, used = [], 0
+        else:
+            active = [r for r in prev_active if r in live]
+            used = sum(live[r].kv_if_resident for r in active)
+            waiting = [r for r in live if r not in set(active)]
+            candidates = self.scheduler.order(waiting)
+        for rid in candidates:
+            if rid in active or len(active) >= max_batch:
                 continue
+            need = live[rid].kv_if_resident
+            if used + need <= self._cap:
+                active.append(rid)
+                used += need
+        return active
 
-            active = select_active(prev_active)
-            if not active:
-                # queue non-empty but nothing fits (e.g. giant prompt while
-                # actives were preempted away) — shouldn't happen with
-                # preemptive policies; guard by forcing the top request
-                top = self.scheduler.order(list(live.keys()))[0]
-                active = [top]
+    def step(self, horizon: float = float("inf")) -> None:
+        """One scheduling round: admit due arrivals, pick the active set,
+        advance prefill/decode until the next event, record completions.
+        Decode fast-forward is capped at the node's own next pending
+        arrival *and* at ``horizon`` (the next cluster-global arrival —
+        a routing decision this node must not simulate past)."""
+        live = self._live
+        cap = self._cap
+        self._admit_arrivals()
+        self.scheduler.set_now(self.now)
+        if not live:
+            if self._next < len(self._pending):
+                # idle: jump to the next pending arrival
+                self.now = max(self.now, self._pending[self._next].arrival)
+            return
 
-            # account preemptions (previously active, now displaced)
-            for rid in prev_active:
-                if rid in live and rid not in active:
-                    lv = live[rid]
-                    if lv.resident_kv > 0:
-                        lv.swapped = True
-                        lv.resident_kv = 0
-                        lv.metrics.n_preemptions += 1
-                        self.n_preemptions += 1
+        prev_active = self._prev_active
+        active = self._select_active(prev_active)
+        if not active:
+            # queue non-empty but nothing fits (e.g. giant prompt while
+            # actives were preempted away) — shouldn't happen with
+            # preemptive policies; guard by forcing the top request
+            top = self.scheduler.order(list(live.keys()))[0]
+            active = [top]
 
-            iter_time = 0.0
-
-            # swap-in restored requests
-            for rid in active:
+        # account preemptions (previously active, now displaced)
+        for rid in prev_active:
+            if rid in live and rid not in active:
                 lv = live[rid]
-                if lv.swapped:
-                    iter_time += self.model.swap_time(lv.kv_if_resident)
-                    lv.swapped = False
-                if lv.prefilled:
-                    lv.resident_kv = lv.kv_if_resident
-
-            # prefills (atomic, sequential — each produces the first token)
-            for rid in active:
-                lv = live[rid]
-                if not lv.prefilled:
-                    iter_time += self.model.prefill_time(lv.req.input_len)
-                    lv.prefilled = True
-                    lv.generated = 1  # prefill emits the first output token
-                    lv.resident_kv = lv.kv_if_resident
-                    lv.metrics.ttft = self.now + iter_time - lv.req.arrival
-                    self.n_iterations += 1
-                    self.scheduler.on_progress(rid, lv.generated)
-
-            # decode fast-forward: fixed active set until the next event
-            batch = [live[rid] for rid in active]
-            remaining = [lv.req.true_output_len - lv.generated for lv in batch]
-            steps = max(0, min(remaining))
-            if self.scheduler.policy.refreshing:
-                to_refresh = self.scheduler.min_tokens_to_refresh(active)
-                if to_refresh > 0 and np.isfinite(to_refresh):
-                    steps = min(steps, int(to_refresh))
-            B = len(batch)
-            total_kv = sum(lv.resident_kv for lv in batch)
-            if steps > 0:
-                # capacity exhausted: evict lowest-priority actives until at
-                # least one decode step of growth fits (vLLM-style eviction)
-                while (cap - total_kv) < len(active) and len(active) > 1:
-                    victim = self.scheduler.order(active)[-1]
-                    lv = live[victim]
-                    total_kv -= lv.resident_kv
+                if lv.resident_kv > 0:
                     lv.swapped = True
                     lv.resident_kv = 0
                     lv.metrics.n_preemptions += 1
-                    self.n_evictions += 1
-                    active = [r for r in active if r != victim]
-                batch = [live[rid] for rid in active]
-                B = len(batch)
-                remaining = [lv.req.true_output_len - lv.generated
-                             for lv in batch]
-                steps = min(steps, max(1, min(remaining)))
-                headroom = max(1, (cap - total_kv) // B)
-                steps = min(steps, int(headroom))
-                # cap the run so the next arrival can be scheduled against
-                if next_arrival < len(requests):
-                    gap = arrivals[next_arrival] - (self.now + iter_time)
-                    lo, hi = 1, steps
-                    while lo < hi:  # max k with run_time(k) <= gap
-                        mid = (lo + hi + 1) // 2
-                        if self.model.decode_run_time(B, total_kv, mid) <= gap:
-                            lo = mid
-                        else:
-                            hi = mid - 1
-                        if hi <= lo:
-                            break
-                    steps = max(1, lo)
-                iter_time += self.model.decode_run_time(B, total_kv, steps)
-                self.n_iterations += steps
-                for lv in batch:
-                    lv.generated += steps
-                    lv.resident_kv = lv.kv_if_resident
-            elif all(lv.req.true_output_len <= lv.generated for lv in batch):
-                pass  # all completing right after prefill
-            elif iter_time == 0.0:
-                # no prefill, no decode progress possible: single step
-                iter_time += self.model.decode_iteration_time(B, total_kv)
+                    self.n_preemptions += 1
+
+        iter_time = 0.0
+
+        # swap-in restored requests
+        for rid in active:
+            lv = live[rid]
+            if lv.swapped:
+                iter_time += self.model.swap_time(lv.kv_if_resident)
+                lv.swapped = False
+            if lv.prefilled:
+                lv.resident_kv = lv.kv_if_resident
+
+        # prefills (atomic, sequential — each produces the first token)
+        for rid in active:
+            lv = live[rid]
+            if not lv.prefilled:
+                iter_time += self.model.prefill_time(lv.req.input_len)
+                lv.prefilled = True
+                lv.generated = 1  # prefill emits the first output token
+                lv.resident_kv = lv.kv_if_resident
+                lv.metrics.ttft = self.now + iter_time - lv.req.arrival
                 self.n_iterations += 1
-                for lv in batch:
-                    if lv.generated < lv.req.true_output_len:
-                        lv.generated += 1
-                        lv.resident_kv = lv.kv_if_resident
+                self.scheduler.on_progress(rid, lv.generated)
 
-            self.now += iter_time
+        # decode fast-forward: fixed active set until the next event
+        batch = [live[rid] for rid in active]
+        remaining = [lv.req.true_output_len - lv.generated for lv in batch]
+        steps = max(0, min(remaining))
+        if self.scheduler.policy.refreshing:
+            to_refresh = self.scheduler.min_tokens_to_refresh(active)
+            if to_refresh > 0 and np.isfinite(to_refresh):
+                steps = min(steps, int(to_refresh))
+        B = len(batch)
+        total_kv = sum(lv.resident_kv for lv in batch)
+        if steps > 0:
+            # capacity exhausted: evict lowest-priority actives until at
+            # least one decode step of growth fits (vLLM-style eviction)
+            while (cap - total_kv) < len(active) and len(active) > 1:
+                victim = self.scheduler.order(active)[-1]
+                lv = live[victim]
+                total_kv -= lv.resident_kv
+                lv.swapped = True
+                lv.resident_kv = 0
+                lv.metrics.n_preemptions += 1
+                self.n_evictions += 1
+                active = [r for r in active if r != victim]
+            batch = [live[rid] for rid in active]
+            B = len(batch)
+            remaining = [lv.req.true_output_len - lv.generated
+                         for lv in batch]
+            steps = min(steps, max(1, min(remaining)))
+            headroom = max(1, (cap - total_kv) // B)
+            steps = min(steps, int(headroom))
+            # cap the run so the next scheduling event (this node's next
+            # pending arrival, or the cluster's next routing decision)
+            # can be scheduled against
+            if self._next < len(self._pending):
+                next_t = min(self._pending[self._next].arrival, horizon)
+            else:
+                next_t = horizon
+            if np.isfinite(next_t):
+                gap = next_t - (self.now + iter_time)
+                lo, hi = 1, steps
+                while lo < hi:  # max k with run_time(k) <= gap
+                    mid = (lo + hi + 1) // 2
+                    if self.model.decode_run_time(B, total_kv, mid) <= gap:
+                        lo = mid
+                    else:
+                        hi = mid - 1
+                    if hi <= lo:
+                        break
+                steps = max(1, lo)
+            iter_time += self.model.decode_run_time(B, total_kv, steps)
+            self.n_iterations += steps
+            for lv in batch:
+                lv.generated += steps
+                lv.resident_kv = lv.kv_if_resident
+        elif all(lv.req.true_output_len <= lv.generated for lv in batch):
+            pass  # all completing right after prefill
+        elif iter_time == 0.0:
+            # no prefill, no decode progress possible: single step
+            iter_time += self.model.decode_iteration_time(B, total_kv)
+            self.n_iterations += 1
+            for lv in batch:
+                if lv.generated < lv.req.true_output_len:
+                    lv.generated += 1
+                    lv.resident_kv = lv.kv_if_resident
 
-            # progress + completions (progress reported wholesale: one
-            # dirty-mark pass under a batched backend)
-            progressing: list[str] = []
-            for rid in active:
-                lv = live[rid]
-                if lv.generated >= lv.req.true_output_len:
-                    lv.metrics.ttlt = self.now - lv.req.arrival
-                    if not np.isfinite(lv.metrics.ttft):
-                        lv.metrics.ttft = lv.metrics.ttlt
-                    done.append(lv.metrics)
-                    self.scheduler.on_complete(rid, lv.req.true_output_len)
-                    del live[rid]
-                else:
-                    progressing.append(rid)
-            self.scheduler.on_progress_many(
-                progressing, [live[r].generated for r in progressing])
-            prev_active = [r for r in active if r in live]
+        self.now += iter_time
 
-        return SimResult(metrics=done, makespan=self.now,
+        # progress + completions (progress reported wholesale: one
+        # dirty-mark pass under a batched backend)
+        progressing: list[str] = []
+        for rid in active:
+            lv = live[rid]
+            if lv.generated >= lv.req.true_output_len:
+                lv.metrics.ttlt = self.now - lv.req.arrival
+                if not np.isfinite(lv.metrics.ttft):
+                    lv.metrics.ttft = lv.metrics.ttlt
+                self._done.append(lv.metrics)
+                self.scheduler.on_complete(rid, lv.req.true_output_len)
+                del live[rid]
+            else:
+                progressing.append(rid)
+        self.scheduler.on_progress_many(
+            progressing, [live[r].generated for r in progressing])
+        self._prev_active = [r for r in active if r in live]
+
+    # ------------------------------------------------------------------ run
+
+    def finish(self) -> SimResult:
+        return SimResult(metrics=self._done, makespan=self.now,
                          n_iterations=self.n_iterations,
                          n_preemptions=self.n_preemptions,
                          n_evictions=self.n_evictions,
                          scheduler_stats=dict(self.scheduler.stats))
+
+    def run(self, requests: list[SimRequest]) -> SimResult:
+        """One-shot simulation: feed every arrival, step until drained."""
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.push(r)
+        while self.busy:
+            self.step()
+        return self.finish()
 
 
 def simulate(requests: list[SimRequest], scheduler: Scheduler,

@@ -19,7 +19,15 @@ paper's results and are built in:
   2. **Per-request uncertainty** (Fig. 1(a)): even conditioned on the
      cluster, the output length is random (temperature-0.6 sampling).
 
-Arrivals are Poisson at a configurable RPS (Sec. 4.1).
+Arrivals are Poisson at a configurable RPS (Sec. 4.1).  One generated
+workload is a single cluster-global arrival stream: the single-node
+simulator (``simulator.NodeSimulator``, paper Sec. 4.2–4.3 experiments)
+consumes it directly, while the event-driven multi-node loop
+(``cluster.simulate_cluster``, the Sec. 4.4 scalability topology)
+routes each ``SimRequest`` to a serving node *at its arrival time* —
+requests carry no node affinity here; placement is the router's job.
+For cluster sweeps at fixed per-node load, scale ``rps`` with the node
+count (8 RPS/node in the paper's Fig. 12 setup).
 """
 
 from __future__ import annotations

@@ -1,0 +1,312 @@
+"""Cluster-scale shared-BatchState scheduler: parity, routing, ordering.
+
+The load-bearing invariant of the PR-2 refactor: one shared BatchState
+holding every node's requests must schedule *identically* to one private
+scheduler per node, as long as the routing decisions match — the shared
+state changes where the arrays live, not what the policies compute.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Scheduler, SemanticHistoryPredictor, make_policy
+from repro.simulator import (ClusterScheduler, CostAwareRouter,
+                             JoinShortestWorkRouter, NodeSpec,
+                             generate_workload, make_profile, make_router,
+                             measure_scheduler_overhead, simulate,
+                             simulate_cluster)
+from repro.simulator.workload import SimRequest
+
+PROFILES = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+
+
+def _metric_key(result):
+    """Canonical per-request comparison key (exact float equality)."""
+    return sorted((m.request_id, m.node_id, m.ttft, m.ttlt,
+                   m.n_preemptions) for m in result.metrics)
+
+
+def _req(i, arrival, input_len=64, output_len=32, prompt=None):
+    c = PROFILES[0].clusters[0]
+    return SimRequest(request_id=f"r{i:04d}", arrival=arrival,
+                      prompt=prompt or c.sample_prompt(
+                          np.random.default_rng(i)),
+                      input_len=input_len, true_output_len=output_len,
+                      dataset="sharegpt", cluster=c)
+
+
+# ------------------------------------------------- shared vs fanout parity
+
+@pytest.mark.parametrize("policy", ["fcfs", "fastserve", "sagesched"])
+def test_shared_batchstate_matches_per_node_fanout(policy):
+    """Acceptance criterion: under identical JSOW routing, the shared-
+    BatchState cluster simulation reproduces the per-node-fanout
+    baseline's request metrics exactly (not approximately)."""
+    reqs = generate_workload(PROFILES, 150, rps=18.0, seed=11)
+    # the central scheduler owns ONE history window; for exact parity the
+    # fanout baseline's nodes must share the same predictor instance
+    pred_a, pred_b = SemanticHistoryPredictor(), SemanticHistoryPredictor()
+    shared = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy(policy),
+                                predictor=pred_a), 3)
+    fanout = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy(policy),
+                                predictor=pred_b), 3, shared_state=False)
+    assert _metric_key(shared) == _metric_key(fanout)
+    assert shared.requests_per_node == fanout.requests_per_node
+
+
+def test_object_backend_matches_numpy_in_cluster():
+    """The per-request object oracle and the batched numpy backend must
+    produce the same cluster schedules (node-masked order() included)."""
+    reqs = generate_workload(PROFILES, 80, rps=15.0, seed=3)
+    runs = {}
+    for backend in ("object", "numpy"):
+        pred = SemanticHistoryPredictor()
+        runs[backend] = simulate_cluster(
+            reqs, lambda: Scheduler(policy=make_policy("sagesched"),
+                                    predictor=pred,
+                                    priority_backend=backend), 2)
+    assert _metric_key(runs["object"]) == _metric_key(runs["numpy"])
+
+
+def test_single_node_cluster_equals_standalone_simulate():
+    """n_nodes=1 reduces the event-driven loop to the monolithic
+    NodeSimulator.run — metrics must agree exactly."""
+    reqs = generate_workload(PROFILES, 90, rps=12.0, seed=5)
+    cluster = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched")), 1)
+    standalone = simulate(reqs, Scheduler(policy=make_policy("sagesched")))
+    want = sorted((m.request_id, m.ttft, m.ttlt)
+                  for m in standalone.metrics)
+    got = sorted((m.request_id, m.ttft, m.ttlt) for m in cluster.metrics)
+    assert got == want
+
+
+def test_cluster_factory_scheduler_is_used():
+    """Regression: ClusterScheduler must not swap an *empty* configured
+    scheduler (falsy via __len__) for a default one."""
+    sched = Scheduler(policy=make_policy("fcfs"))
+    cs = ClusterScheduler(sched, n_nodes=2)
+    assert cs.scheduler is sched
+
+
+# ------------------------------------------------------- node-masked order
+
+@pytest.mark.parametrize("backend", ["object", "numpy"])
+def test_order_node_masked(backend):
+    sched = Scheduler(policy=make_policy("sagesched"),
+                      priority_backend=backend)
+    rng = np.random.default_rng(0)
+    for i in range(30):
+        sched.admit(f"r{i}", f"prompt about topic {i % 5}",
+                    int(rng.integers(16, 512)), arrival=float(i),
+                    node_id=i % 3)
+    full = sched.order()
+    for nid in range(3):
+        masked = sched.order(node_id=nid)
+        assert masked == [r for r in full if int(r[1:]) % 3 == nid]
+    # reassignment moves a request between node queues
+    sched.assign_node("r0", 2)
+    assert "r0" in sched.order(node_id=2)
+    assert "r0" not in sched.order(node_id=0)
+
+
+def test_outstanding_by_node_batched_matches_object():
+    outs = []
+    for backend in ("object", "numpy"):
+        sched = Scheduler(policy=make_policy("sagesched"),
+                          priority_backend=backend)
+        for i in range(20):
+            sched.admit(f"r{i}", f"p{i % 4}", 64 + i, arrival=float(i),
+                        node_id=i % 4)
+        outs.append(sched.outstanding_by_node(4))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-12)
+    assert (outs[0] > 0).all()
+
+
+# ---------------------------------------------------------------- routers
+
+def test_jsow_router_matches_seed_bucketing():
+    """The JSOW router reproduces the decayed outstanding-work bucketing
+    the seed's simulate_cluster used (Llumnix-style baseline)."""
+    reqs = generate_workload(PROFILES, 60, rps=25.0, seed=2)
+    router = JoinShortestWorkRouter(3)
+    got = [router.route(r) for r in sorted(reqs, key=lambda r: r.arrival)]
+    # reference implementation (the seed's inline loop)
+    outstanding = np.zeros(3)
+    last_t = 0.0
+    want = []
+    for r in sorted(reqs, key=lambda x: x.arrival):
+        outstanding = np.maximum(0.0, outstanding
+                                 - (r.arrival - last_t) * 2000.0)
+        last_t = r.arrival
+        n = int(np.argmin(outstanding))
+        want.append(n)
+        outstanding[n] += r.input_len + 2.0 * 256
+    assert got == want
+
+
+def test_cost_router_prefers_node_with_headroom():
+    """A node whose KV budget cannot take the arriving request is avoided
+    even when it has the least outstanding predicted work."""
+    pred = SemanticHistoryPredictor()
+    spec = NodeSpec()
+    router = CostAwareRouter(2, pred, spec=spec)
+    cap = spec.kv_capacity_tokens
+    # saturate node 0's KV mirror but leave its outstanding work at ~zero
+    router.kv[0].allocate("blocker", int(cap * 0.99))
+    r = _req(0, arrival=0.0, input_len=2048, output_len=512)
+    assert router.route(r) == 1
+    router.on_complete(r.request_id, 1)
+    assert router.kv[1].used_tokens == 0
+    assert router.outstanding[1] == 0.0
+
+
+def test_cost_router_prefers_less_predicted_work():
+    """With headroom everywhere, routing follows the predicted cost-mean
+    outstanding counter — high-cost requests repel later arrivals."""
+    pred = SemanticHistoryPredictor()
+    # teach the predictor: "write a long story" prompts run very long
+    for i in range(50):
+        pred.observe(f"write a long story {i}", 32, 2000)
+        pred.observe(f"short answer {i}", 32, 8)
+    router = CostAwareRouter(2, pred)
+    long_req = _req(0, 0.0, input_len=32, prompt="write a long story now")
+    short_req = _req(1, 0.0, input_len=32, prompt="short answer please")
+    n_long = router.route(long_req)
+    # the long request's predicted cost parks on its node; the next two
+    # short requests must both prefer the other node
+    n_s1 = router.route(short_req)
+    assert n_s1 == 1 - n_long
+    n_s2 = router.route(_req(2, 0.0, input_len=32,
+                             prompt="short answer again"))
+    assert n_s2 == 1 - n_long
+    # completing the long request frees its node again
+    router.on_complete(long_req.request_id, n_long)
+    assert router.outstanding[n_long] == pytest.approx(0.0)
+
+
+def test_cost_router_saturated_picks_least_overcommitted():
+    pred = SemanticHistoryPredictor()
+    router = CostAwareRouter(2, pred)
+    cap = router.kv[0].capacity_tokens
+    router.kv[0].allocate("b0", cap)
+    router.kv[1].allocate("b1", int(cap * 0.98))
+    assert router.route(_req(0, 0.0, input_len=4096, output_len=2048)) == 1
+
+
+def test_cost_router_saturated_spreads_by_outstanding_work():
+    """Regression: under full saturation the router must rank by live
+    outstanding work, not frozen KV-mirror headroom — a node whose slot
+    mirror stopped accruing must not soak up all overload traffic."""
+    pred = SemanticHistoryPredictor()
+    router = CostAwareRouter(2, pred)
+    cap = router.kv[0].capacity_tokens
+    router.kv[0].allocate("b0", int(cap * 0.96))
+    router.kv[1].allocate("b1", int(cap * 0.99))
+    # node 0 has more raw headroom but a mountain of queued work
+    router.outstanding[0] = 1e9
+    router.outstanding[1] = 1.0
+    assert router.route(_req(0, 0.0, input_len=4096, output_len=2048)) == 1
+
+
+def test_cost_router_survives_deep_backlog():
+    """Regression: more than max_batch queued requests per node used to
+    exhaust the router's KV-mirror slot pool and crash allocate()."""
+    pred = SemanticHistoryPredictor()
+    spec = NodeSpec()
+    router = CostAwareRouter(2, pred, spec=spec)
+    n = 2 * spec.max_batch + 8   # > max_batch slots per node, cluster-wide
+    for i in range(n):
+        router.route(_req(i, arrival=0.0, input_len=64))
+    assert int(router.outstanding.sum()) > 0
+    # completions unwind cleanly even for requests that skipped the mirror
+    for i in range(n):
+        router.on_complete(f"r{i:04d}", i % 2)
+
+
+def test_cost_router_hands_prediction_to_admit():
+    """The route-time prediction is reused by Scheduler.admit (no second
+    semantic-history lookup for the same request)."""
+    reqs = generate_workload(PROFILES, 40, rps=20.0, seed=13)
+    pred = SemanticHistoryPredictor()
+    sched_holder = []
+
+    def factory():
+        s = Scheduler(policy=make_policy("sagesched"), predictor=pred)
+        sched_holder.append(s)
+        return s
+
+    simulate_cluster(reqs, factory, 2, router="cost")
+    # every request predicted exactly once (by the router); admit reused it
+    assert sched_holder[0].stats["predictions"] == 0
+
+
+def test_cost_router_end_to_end_smoke():
+    reqs = generate_workload(PROFILES, 100, rps=20.0, seed=9)
+    res = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched")), 3,
+        router="cost")
+    assert len(res.metrics) == 100
+    assert res.router == "cost"
+    assert sum(res.requests_per_node) == 100
+    assert all(np.isfinite(m.ttlt) for m in res.metrics)
+
+
+def test_make_router_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_router("nope", 2)
+
+
+# -------------------------------------------------- event-loop determinism
+
+def test_simultaneous_arrivals_are_routed_in_input_order():
+    """Regression: arrivals with identical timestamps must route
+    deterministically (input order), and the simulation must be
+    reproducible run-to-run."""
+    reqs = [_req(i, arrival=1.0) for i in range(6)]  # all at t=1.0
+    runs = []
+    for _ in range(2):
+        res = simulate_cluster(
+            reqs, lambda: Scheduler(policy=make_policy("fcfs")), 3)
+        runs.append(res)
+    # JSOW with equal arrivals: round-robin in input order
+    by_node = {m.request_id: m.node_id for m in runs[0].metrics}
+    assert [by_node[f"r{i:04d}"] for i in range(6)] == [0, 1, 2, 0, 1, 2]
+    assert _metric_key(runs[0]) == _metric_key(runs[1])
+    assert len(runs[0].metrics) == 6
+
+
+def test_event_loop_routes_against_live_state():
+    """A request arriving after the cluster drains must still be served
+    (idle-node wakeup), and arrival interleaving across nodes must not
+    lose or duplicate requests."""
+    reqs = [_req(0, 0.0, output_len=8), _req(1, 50.0, output_len=8),
+            _req(2, 50.0 + 1e-9, output_len=8)]
+    res = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched")), 2)
+    assert sorted(m.request_id for m in res.metrics) == \
+        ["r0000", "r0001", "r0002"]
+    for m in res.metrics:
+        assert m.ttlt < 10.0  # served promptly at its own arrival
+
+
+# -------------------------------------------------------- overhead probe
+
+def test_measure_overhead_drives_batched_path():
+    o = measure_scheduler_overhead(4, n_probe=8, history_size=1000,
+                                   queue_depth=200)
+    assert o["backend"] == "numpy"
+    assert o["n_nodes"] == 4
+    assert o["queue_depth"] >= 8
+    assert o["total_ms"] == pytest.approx(
+        o["predict_ms"] + o["schedule_ms"])
+    assert 0 < o["schedule_ms"] < 1000
+
+
+def test_measure_overhead_object_backend_still_works():
+    o = measure_scheduler_overhead(1, n_probe=4, history_size=500,
+                                   queue_depth=100, backend="object")
+    assert o["backend"] == "object"
+    assert np.isfinite(o["total_ms"])

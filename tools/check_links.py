@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Fail CI on broken relative links in Markdown files.  Stdlib only.
+
+Checks every ``[text](target)`` and bare ``<target>`` style link in the
+given files/directories:
+
+  * external schemes (http/https/mailto) are skipped — CI must not
+    depend on network reachability;
+  * absolute paths are rejected (docs must stay relocatable);
+  * relative targets (after stripping ``#fragment``) must exist on disk,
+    resolved against the linking file's directory;
+  * intra-file anchors (``#section``) are validated against the target
+    file's ATX headings using GitHub's slug rules (lowercase, spaces to
+    dashes, punctuation dropped).
+
+Usage:  python tools/check_links.py README.md docs [more files/dirs...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMG_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)                # inline formatting
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # links -> text
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md: Path, repo_root: Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    targets = [m.group(1) for m in LINK_RE.finditer(text)]
+    targets += [m.group(1) for m in IMG_RE.finditer(text)]
+    for raw in targets:
+        if raw.startswith(SKIP_SCHEMES):
+            continue
+        path_part, _, fragment = raw.partition("#")
+        if raw.startswith("/"):
+            errors.append(f"{md}: absolute link {raw!r} (use relative)")
+            continue
+        if path_part:
+            target = (md.parent / path_part).resolve()
+            if not target.exists():
+                errors.append(f"{md}: broken link {raw!r} "
+                              f"(no such file {path_part!r})")
+                continue
+            if repo_root not in target.parents and target != repo_root:
+                errors.append(f"{md}: link {raw!r} escapes the repository")
+                continue
+        else:
+            target = md
+        if fragment and target.suffix == ".md" and target.is_file():
+            if fragment not in anchors_of(target):
+                errors.append(f"{md}: broken anchor {raw!r} "
+                              f"(no heading slug {fragment!r} in "
+                              f"{target.name})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        argv = ["README.md", "docs"]
+    repo_root = Path.cwd().resolve()
+    files: list[Path] = []
+    errors: list[str] = []
+    for arg in argv:
+        p = Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.is_file():
+            files.append(p)
+        else:
+            # a vanished target must FAIL the job, not silently shrink
+            # its scope to nothing
+            errors.append(f"argument {arg!r} does not exist")
+    for md in files:
+        errors.extend(check_file(md.resolve(), repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown file(s): "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
