@@ -13,6 +13,13 @@ vectorized BatchState path (bit-identical results); pallas runs the
 Gittins kernel (interpret-mode off-TPU, so only meaningful as a hot path
 on real hardware — enable with --backends ...,pallas).
 
+An *admission* sweep times the batch-first ingress (PR 3): one
+``admit_batch`` call vs the equivalent scalar ``admit`` loop at burst
+sizes 1/32/256/1024 with the real ``SemanticHistoryPredictor`` over a
+full 10k history window (the `admit.*` rows; acceptance: >= 5x at 1024).
+A *routing* sweep compares jsow vs cost-aware vs quantile-of-cost
+placement on one workload.
+
 A second sweep measures the *cluster* decision path (paper Fig. 12): one
 central scheduler in front of 1→64 nodes at 8 RPS/node, standing queue
 scaled with load — per-arrival predict and schedule (cluster-wide batched
@@ -39,7 +46,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import (LengthDistribution, Predictor, ResourceBoundCost,
-                        Scheduler, make_policy)
+                        Scheduler, SemanticHistoryPredictor, make_policy)
 
 
 class PooledPredictor(Predictor):
@@ -115,6 +122,100 @@ def bench_one(backend: str, depth: int, *, policy: str = "sagesched",
     }
 
 
+def _seeded_semantic_predictor(history_size: int = 10_000, pool: int = 256,
+                               seed: int = 0) -> SemanticHistoryPredictor:
+    """The paper's predictor over a full 10k history window, seeded from a
+    pool of prompt templates (bursty traffic repeats semantics — Fig. 4)."""
+    rng = np.random.default_rng(seed)
+    words = ("alpha beta gamma delta epsilon zeta eta theta iota kappa "
+             "lambda mu nu xi omicron pi rho sigma tau upsilon").split()
+    prompts = [" ".join(rng.choice(words, size=16)) for _ in range(pool)]
+    reps = max(1, history_size // pool)
+    pred = SemanticHistoryPredictor()
+    pred.seed(prompts * reps, np.full(pool * reps, 128),
+              rng.integers(50, 2000, pool * reps))
+    pred._bench_pool = prompts          # reused by bench_admission
+    return pred
+
+
+def bench_admission(bursts: list[int], history_size: int = 10_000,
+                    seed: int = 0) -> list[dict]:
+    """Admission-throughput sweep: one ``admit_batch`` call vs the
+    equivalent scalar ``admit`` loop, per burst size, with the real
+    ``SemanticHistoryPredictor`` over a 10k history (the batched ingress
+    acceptance metric: >= 5x at 1024-request bursts on CPU).  Both sides
+    share the predictor (reads only), so the comparison isolates the
+    ingress path: batched history search + batched pushforward +
+    single-pass BatchState append vs the per-request loop."""
+    pred = _seeded_semantic_predictor(history_size, seed=seed)
+    pool = pred._bench_pool
+    # warm the prompt-embedding memo for the whole pool so neither timed
+    # side pays one-off embedding of a prompt the other then gets for
+    # free (the scalar loop runs first and would otherwise hand the
+    # batched side a fully warm cache)
+    pred.predict_batch(pool, [128] * len(pool))
+    rng = np.random.default_rng(seed + 1)
+    rows = []
+    for burst in bursts:
+        prompts = [pool[i % len(pool)] for i in range(burst)]
+        input_lens = [int(x) for x in rng.integers(16, 1024, burst)]
+        arrivals = [float(i) for i in range(burst)]
+        ids = [f"r{i}" for i in range(burst)]
+        mk = lambda: Scheduler(predictor=pred,
+                               cost_model=ResourceBoundCost(),
+                               policy=make_policy("sagesched"),
+                               priority_backend="numpy")
+        scalar_sched, batch_sched = mk(), mk()
+        t0 = time.perf_counter()
+        for i in range(burst):
+            scalar_sched.admit(ids[i], prompts[i], input_lens[i],
+                               arrival=arrivals[i])
+        t_scalar = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batch_sched.admit_batch(ids, prompts, input_lens, arrivals=arrivals)
+        t_batch = time.perf_counter() - t0
+        assert scalar_sched.order() == batch_sched.order()  # parity guard
+        rows.append({
+            "burst": burst,
+            "history_size": history_size,
+            "scalar_per_s": burst / t_scalar,
+            "batched_per_s": burst / t_batch,
+            "speedup": t_scalar / t_batch,
+        })
+        print(f"admit burst={burst:>5d}  scalar/s={burst / t_scalar:>8.0f}  "
+              f"batched/s={burst / t_batch:>8.0f}  "
+              f"speedup={t_scalar / t_batch:.1f}x")
+    return rows
+
+
+def bench_routing(n_requests: int, n_nodes: int, seed: int = 0
+                  ) -> list[dict]:
+    """Router sweep on one workload: jsow baseline vs cost-aware routing
+    on the predicted mean vs its 0.9-quantile (robust placement under
+    heavy-tailed predictions, cf. arXiv:2508.14544)."""
+    from repro.simulator import generate_workload, make_profile, \
+        simulate_cluster
+
+    profiles = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+    reqs = generate_workload(profiles, n_requests, rps=6.0 * n_nodes,
+                             seed=seed)
+    rows = []
+    for router, quantile in (("jsow", None), ("cost", None), ("cost", 0.9)):
+        res = simulate_cluster(
+            reqs, lambda: Scheduler(policy=make_policy("sagesched")),
+            n_nodes, router=router, route_quantile=quantile)
+        rows.append({
+            "router": res.router,
+            "n_nodes": n_nodes,
+            "n_requests": n_requests,
+            "mean_ttlt_s": res.mean_ttlt,
+            "mean_ttft_s": res.mean_ttft,
+        })
+        print(f"routing {res.router:>10s} nodes={n_nodes}  "
+              f"ttlt={res.mean_ttlt:7.2f}s  ttft={res.mean_ttft:7.2f}s")
+    return rows
+
+
 def bench_cluster(nodes: list[int], backends: list[str],
                   n_probe: int, pallas_probe: int = 5) -> list[dict]:
     """Fig. 12 cluster sweep: central-scheduler per-arrival overhead at
@@ -174,6 +275,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--policy", default="sagesched")
     ap.add_argument("--bucket-size", type=int, default=200)
     ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--bursts", default=None,
+                    help="comma-separated admission burst sizes "
+                         "(default 1,32,256,1024; empty string skips)")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -212,6 +316,19 @@ def main(argv=None) -> dict:
                   f"{speedup[str(depth)]['refresh']:.1f}x refresh, "
                   f"{speedup[str(depth)]['order']:.1f}x order")
 
+    # batched-ingress sections: admission bursts + router sweep.  Cheap
+    # enough (~seconds) to run under --smoke unchanged, so CI tracks the
+    # admit.* speedups on every push.
+    if args.bursts == "":
+        bursts = []
+    elif args.bursts:
+        bursts = [int(b) for b in args.bursts.split(",")]
+    else:
+        bursts = [1, 32, 256, 1024]
+    admission_rows = bench_admission(bursts) if bursts else []
+    routing_rows = bench_routing(n_requests=60 if quick else 300,
+                                 n_nodes=2 if quick else 4)
+
     if args.cluster_nodes == "":
         nodes = []
     elif args.cluster_nodes:
@@ -238,6 +355,14 @@ def main(argv=None) -> dict:
         "reps": reps,
         "results": results,
         "speedup_numpy_vs_object": speedup,
+        "admission": {
+            "predictor": "semantic_history",
+            "history_size": 10_000,
+            "results": admission_rows,
+            "speedup": {str(r["burst"]): round(r["speedup"], 2)
+                        for r in admission_rows},
+        },
+        "routing": routing_rows,
         "cluster": {
             "rps_per_node": 8.0,
             "results": cluster_rows,
@@ -265,6 +390,15 @@ def run(quick: bool = False):
     for depth, s in payload["speedup_numpy_vs_object"].items():
         rows.append((f"scheduler.speedup_{depth}.refresh",
                      round(s["refresh"], 2), "x_vs_object"))
+    for r in payload["admission"]["results"]:
+        tag = f"admit.burst_{r['burst']}"
+        rows.append((f"{tag}.batched_per_s", round(r["batched_per_s"]),
+                     "admissions_per_s"))
+        rows.append((f"{tag}.speedup", round(r["speedup"], 2),
+                     "x_vs_scalar_loop"))
+    for r in payload["routing"]:
+        rows.append((f"routing.{r['router']}.mean_ttlt",
+                     round(r["mean_ttlt_s"], 3), "s"))
     for r in payload["cluster"]["results"]:
         tag = f"scheduler.cluster_{r['backend']}_n{r['n_nodes']}"
         rows.append((f"{tag}.schedule_ms", round(r["schedule_ms"], 3), "ms"))

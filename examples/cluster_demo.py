@@ -6,7 +6,9 @@ serving nodes, with pluggable request routing:
   * jsow — join-shortest-outstanding-work on the fixed admission-time
            token guess (the Llumnix-style baseline);
   * cost — predicted CostDistribution means + per-node KV headroom
-           (uncertainty-aware placement).
+           (uncertainty-aware placement);
+  * cost with route_quantile=0.9 — routes on the 0.9-quantile of the
+           predicted cost instead of its mean (robust to heavy tails).
 
 Also prints the Fig. 12 overhead probe: per-request predict / schedule
 wall-clock of the central scheduler at the same node count.
@@ -36,16 +38,17 @@ def main():
     print(f"{args.n} requests, {args.nodes} nodes, "
           f"{args.rps_per_node * args.nodes:.0f} RPS aggregate, "
           f"policy={args.policy}\n")
-    print(f"{'router':>6s} {'mean TTLT':>10s} {'mean TTFT':>10s} "
+    print(f"{'router':>10s} {'mean TTLT':>10s} {'mean TTFT':>10s} "
           f"{'requests/node':>24s}")
-    for router in ("jsow", "cost"):
+    for router, quantile in (("jsow", None), ("cost", None), ("cost", 0.9)):
         predictor = SemanticHistoryPredictor()
         res = simulate_cluster(
             reqs,
             lambda: Scheduler(policy=make_policy(args.policy),
                               predictor=predictor),
-            args.nodes, router=router)
-        print(f"{router:>6s} {res.mean_ttlt:9.2f}s {res.mean_ttft:9.2f}s "
+            args.nodes, router=router, route_quantile=quantile)
+        print(f"{res.router:>10s} {res.mean_ttlt:9.2f}s "
+              f"{res.mean_ttft:9.2f}s "
               f"{str(res.requests_per_node):>24s}")
 
     print("\ncentral-scheduler overhead (Fig. 12 probe, numpy backend):")

@@ -21,10 +21,14 @@ for i in range(200):
                           int(rng.lognormal(6.8, 0.5)))
 
 # 2. The scheduler: predict -> cost (O^2/2 + I*O) -> Gittins index.
+# Ingress is batch-first: a burst of arrivals is ONE batched admission
+# (one history search for the burst; scalar .admit() is the B=1 case).
 sched = Scheduler(predictor=predictor, cost_model=ResourceBoundCost(),
                   policy=make_policy("sagesched"))
-sched.admit("story", "write a long fantasy story now", 60, arrival=0.0)
-sched.admit("summ", "summarize this report please", 800, arrival=0.1)
+sched.admit_batch(["story", "summ"],
+                  ["write a long fantasy story now",
+                   "summarize this report please"],
+                  [60, 800], arrivals=[0.0, 0.1])
 
 for rid in ("summ", "story"):
     sr = sched.get(rid)

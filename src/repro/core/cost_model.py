@@ -42,7 +42,20 @@ __all__ = [
     "CostDistribution",
     "bucketize_support",
     "make_cost_model",
+    "quantile_index",
 ]
+
+
+def quantile_index(probs: np.ndarray, q: float) -> int:
+    """Index of the smallest support point whose CDF reaches ``q``.
+
+    Float rounding can leave cdf[-1] < q (e.g. 0.9999999998 < 1.0), in
+    which case searchsorted returns len(cdf) — clip to the last support
+    point.  Shared by ``CostDistribution.quantile`` and
+    ``LengthDistribution.quantile``.
+    """
+    cdf = np.cumsum(probs)
+    return min(int(np.searchsorted(cdf, q)), probs.shape[0] - 1)
 
 
 def bucketize_support(support: np.ndarray, probs: np.ndarray, k: int
@@ -109,6 +122,12 @@ class CostDistribution:
         compressed otherwise.  See ``bucketize_support``."""
         return bucketize_support(self.support, self.probs, k)
 
+    def quantile(self, q: float) -> float:
+        """Smallest support point with CDF >= q.  Routing on an upper
+        quantile instead of the mean is the robust-placement knob of
+        ``CostAwareRouter(route_quantile=...)``."""
+        return float(self.support[quantile_index(self.probs, q)])
+
     def shift(self, attained: float) -> "CostDistribution":
         """Condition on X > ``attained`` and re-origin at it (the Bayesian
         update behind the paper's runtime Gittins refresh: mass at costs the
@@ -161,13 +180,32 @@ class CostModel:
         ``lengths``/``probs`` describe P(O = lengths[i]) = probs[i].
         """
         costs = np.asarray(self.total(input_len, np.asarray(lengths, np.float64)))
+        probs = np.asarray(probs, np.float64)
+        if costs.size and np.all(np.diff(costs) > 0):
+            # every model here is monotone in O over an ascending support,
+            # so the sort/unique/merge below is almost always the identity
+            # — skip it (bit-identical: the general path's stable argsort,
+            # unique and add.at reduce to copies when costs are strictly
+            # ascending)
+            return CostDistribution(costs, probs / probs.sum())
         order = np.argsort(costs, kind="stable")
-        costs, probs = costs[order], np.asarray(probs, np.float64)[order]
+        costs, probs = costs[order], probs[order]
         uniq, inv = np.unique(costs, return_inverse=True)
         merged = np.zeros_like(uniq)
         np.add.at(merged, inv, probs)
         merged = merged / merged.sum()
         return CostDistribution(uniq, merged)
+
+    def distribution_batch(self, input_lens, length_dists
+                           ) -> list[CostDistribution]:
+        """Batched pushforward: one ``CostDistribution`` per
+        (input_len, LengthDistribution) pair.  Supports are ragged, so
+        the merge stays per-row; the batched-ingress win is amortizing
+        the *prediction* and the BatchState writes around this call.
+        Equals the sequence of scalar ``distribution`` calls exactly.
+        """
+        return [self.distribution(int(il), ld.lengths, ld.probs)
+                for il, ld in zip(input_lens, length_dists)]
 
 
 class ResourceBoundCost(CostModel):

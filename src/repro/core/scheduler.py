@@ -34,6 +34,15 @@ pluggable backend (vectorized numpy, or the Pallas TPU kernel), and
 ``priority_backend="object"`` preserves the original object-at-a-time
 path as the oracle; the numpy backend is engineered to be bit-identical
 to it (see docs/scheduler_internals.md).
+
+Batch-first ingress
+-------------------
+Admission is batched the same way (PR 3): ``admit_batch`` registers a
+whole burst of arrivals through one ``Predictor.predict_batch`` call,
+one cost-model sweep, one ``BatchState.add_batch`` append and one
+vectorized initial-priority evaluation; scalar ``admit`` is its B = 1
+case.  The two are bit-identical — see the "Batched ingress" section of
+docs/scheduler_internals.md.
 """
 
 from __future__ import annotations
@@ -43,13 +52,20 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .backends import BatchView, make_priority_backend
+from .backends import (BatchView, NumpyPriorityBackend,
+                       make_priority_backend)
 from .cost_model import (CostDistribution, CostModel, ResourceBoundCost,
                          bucketize_support)
 from .policies import Policy, SageSchedPolicy
 from .predictor import LengthDistribution, Predictor, SemanticHistoryPredictor
 
 __all__ = ["ScheduledRequest", "BatchState", "Scheduler"]
+
+# Admission-time priorities are always evaluated in float64 numpy (the
+# backend that is bit-identical to the scalar oracle), no matter which
+# refresh backend the scheduler was configured with — see
+# Scheduler._admission_priorities.
+_ADMIT_BACKEND = NumpyPriorityBackend()
 
 
 @dataclass
@@ -152,6 +168,9 @@ class BatchState:
             length_dist: LengthDistribution, *, arrival: float,
             input_len: int, next_refresh: float, priority: float,
             base_priority: float, node_id: int = -1) -> int:
+        """Append one row — semantically the B = 1 case of ``add_batch``,
+        kept as direct scalar writes (no index arrays) because single
+        admissions remain a hot path for non-bursty callers."""
         k_needed = max(cost_dist.support.shape[0],
                        length_dist.lengths.shape[0])
         if k_needed > self.k:
@@ -193,6 +212,47 @@ class BatchState:
                                      probs, self.k)
             sup_arr[i] = s
             prob_arr[i] = p
+
+    def add_batch(self, rids: list[str], cost_dists, length_dists, *,
+                  arrivals, input_lens, next_refreshes, priorities,
+                  base_priorities, node_ids) -> np.ndarray:
+        """Append B rows in one pass: ONE column grow (to the widest
+        distribution in the batch), ONE amortized row grow, ragged
+        per-row distribution writes, then vectorized scalar-column
+        writes.  State afterwards is identical to B sequential ``add``
+        calls (power-of-two growth commutes with batching).  Returns the
+        new row indices."""
+        b = len(rids)
+        if b == 0:
+            return np.zeros(0, np.int64)
+        k_needed = max(max(cd.support.shape[0] for cd in cost_dists),
+                       max(ld.lengths.shape[0] for ld in length_dists))
+        if k_needed > self.k:
+            self._grow_cols(k_needed)
+        while self.cap < self.n + b:
+            self._grow_rows()
+        i0 = self.n
+        idx = np.arange(i0, i0 + b)
+        for j in range(b):
+            i = i0 + j
+            self._write_row(self.cost_sup, self.cost_probs, i,
+                            cost_dists[j].support, cost_dists[j].probs)
+            self._write_row(self.len_sup, self.len_probs, i,
+                            length_dists[j].lengths, length_dists[j].probs)
+            self.cost_mean[i] = cost_dists[j].mean
+            self.index[rids[j]] = i
+        self.ids.extend(rids)
+        self.generated[idx] = 0
+        self.attained[idx] = 0.0
+        self.arrival[idx] = arrivals
+        self.input_len[idx] = input_lens
+        self.next_refresh[idx] = next_refreshes
+        self.priority[idx] = priorities
+        self.base_priority[idx] = base_priorities
+        self.node_id[idx] = node_ids
+        self.dirty[idx] = False
+        self.n += b
+        return idx
 
     def remove(self, rid: str) -> None:
         i = self.index.pop(rid)
@@ -261,7 +321,8 @@ class Scheduler:
     def admit(self, request_id: str, prompt: str, input_len: int,
               arrival: float | None = None,
               node_id: int = -1, length_dist=None) -> ScheduledRequest:
-        """Register an arriving request: predict, cost, prioritize.
+        """Register one arriving request — the B = 1 case of
+        ``admit_batch`` (batch is the primitive; scalar is sugar).
 
         ``node_id`` tags the request with its serving node (cluster mode,
         see repro.simulator.cluster); ``order(node_id=...)`` then ranks
@@ -269,44 +330,165 @@ class Scheduler:
         ``length_dist`` short-circuits the predictor with an already-
         computed prediction (e.g. the cost-aware router's route-time
         lookup) so the semantic-history search is not paid twice."""
-        if request_id in self._live:
-            raise KeyError(f"request {request_id!r} already admitted")
-        arrival = self.clock() if arrival is None else arrival
-        if length_dist is None:
-            length_dist = self.predictor.predict(prompt, input_len)
-            self.stats["predictions"] += 1
-        if self.noise_weight > 0.0:
-            length_dist = length_dist.mix_uniform(self.noise_weight,
-                                                  self.noise_max_len)
-        cost_dist = self.cost_model.distribution(
-            input_len, length_dist.lengths, length_dist.probs)
-        # encode arrival order into the float so FCFS ties stay stable
-        self._arrival_seq += 1
-        sr = ScheduledRequest(
-            request_id=request_id, prompt=prompt, input_len=input_len,
-            arrival=arrival + self._arrival_seq * 1e-9,
-            length_dist=length_dist, cost_dist=cost_dist, node_id=node_id)
+        return self.admit_batch(
+            [request_id], [prompt], [input_len],
+            arrivals=None if arrival is None else [arrival],
+            node_ids=node_id,
+            length_dists=None if length_dist is None else [length_dist])[0]
+
+    def admit_batch(self, request_ids, prompts, input_lens, *,
+                    arrivals=None, node_ids=-1,
+                    length_dists=None) -> list[ScheduledRequest]:
+        """Admit a burst of arrivals in one batched pass: one
+        ``predict_batch`` over the (unique) prompts, one cost-model
+        pushforward sweep, one ``BatchState.add_batch`` append (single
+        capacity grow), and one vectorized initial-priority evaluation.
+        Bit-identical to the equivalent sequence of scalar ``admit``
+        calls — asserted column-for-column in tests/test_batch_ingress.py.
+
+        ``arrivals=None`` stamps the whole burst with ONE clock reading
+        (a scalar-admit loop would read the clock per request — pass
+        explicit arrivals when that distinction matters).  ``node_ids``
+        is a scalar or per-request sequence.  ``length_dists`` may carry
+        route-time predictions; ``None`` entries are predicted here, in
+        one batched call.  Duplicate request ids (against live state or
+        within the burst) raise before any state is mutated.
+        """
+        rids = list(request_ids)
+        b = len(rids)
+        if b == 0:
+            return []
+        seen: set[str] = set()
+        for rid in rids:
+            if rid in self._live or rid in seen:
+                raise KeyError(f"request {rid!r} already admitted")
+            seen.add(rid)
+        prompts = list(prompts)
+        input_lens = [int(il) for il in input_lens]
+        if arrivals is None:
+            now = self.clock()
+            arrivals = [now] * b
+        else:
+            arrivals = [float(a) for a in arrivals]
+        if np.ndim(node_ids) == 0:
+            node_ids = [int(node_ids)] * b
+        else:
+            node_ids = [int(nd) for nd in node_ids]
+        length_dists = [None] * b if length_dists is None \
+            else list(length_dists)
+        missing = [j for j in range(b) if length_dists[j] is None]
+        if missing:
+            # predict_many: the batched path when it is authoritative for
+            # this predictor class, else a scalar-predict loop (honors
+            # subclasses that override only the scalar method)
+            preds = self.predictor.predict_many(
+                [prompts[j] for j in missing],
+                [input_lens[j] for j in missing])
+            for j, d in zip(missing, preds):
+                length_dists[j] = d
+            self.stats["predictions"] += len(missing)
+        if self.noise_weight > 0.0:  # Fig. 11 robustness experiment
+            length_dists = [ld.mix_uniform(self.noise_weight,
+                                           self.noise_max_len)
+                            for ld in length_dists]
+        cost_dists = self.cost_model.distribution_batch(input_lens,
+                                                        length_dists)
+        srs: list[ScheduledRequest] = []
+        for j in range(b):
+            # encode arrival order into the float so FCFS ties stay stable
+            self._arrival_seq += 1
+            srs.append(ScheduledRequest(
+                request_id=rids[j], prompt=prompts[j],
+                input_len=input_lens[j],
+                arrival=arrivals[j] + self._arrival_seq * 1e-9,
+                length_dist=length_dists[j], cost_dist=cost_dists[j],
+                node_id=node_ids[j]))
         pol = self.policy
+        st = self._state
+        for sr in srs:
+            self._live[sr.request_id] = sr
+        if st is None:
+            for sr in srs:  # object backend: the eager scalar oracle
+                sr.priority = pol.priority(sr)
+                sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
+            return srs
+        if b == 1:
+            # single admission: direct scalar writes, no index arrays —
+            # this keeps the ``admit`` sugar as cheap as the pre-batch
+            # scalar path for non-bursty callers
+            sr = srs[0]
+            aging = getattr(pol, "time_varying", False) \
+                and hasattr(pol, "base_priority") \
+                and hasattr(pol, "apply_age")
+            if aging:
+                # one index evaluation, not two: derive the discounted
+                # priority from the cached base instead of recomputing
+                base = pol.base_priority(sr)
+                sr.priority = float(pol.apply_age(
+                    base, sr.arrival, getattr(pol, "now", self._now)))
+            else:
+                sr.priority = pol.priority(sr)
+                base = sr.priority
+            sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
+            st.add(sr.request_id, sr.cost_dist, sr.length_dist,
+                   arrival=sr.arrival, input_len=sr.input_len,
+                   next_refresh=sr.next_refresh, priority=sr.priority,
+                   base_priority=base, node_id=sr.node_id)
+            return srs
+        if pol.has_boundary_batch:
+            nrefresh = pol.next_boundary_batch(np.zeros(b, np.int64),
+                                               self.bucket_size)
+        else:
+            nrefresh = np.array([pol.next_boundary(sr, self.bucket_size)
+                                 for sr in srs], np.float64)
+        for sr, nr in zip(srs, nrefresh):
+            sr.next_refresh = float(nr)
+        idx = st.add_batch(
+            rids, cost_dists, length_dists,
+            arrivals=[sr.arrival for sr in srs], input_lens=input_lens,
+            next_refreshes=nrefresh, priorities=np.zeros(b),
+            base_priorities=np.zeros(b), node_ids=node_ids)
+        base, prio = self._admission_priorities(srs, idx)
+        st.base_priority[idx] = base
+        st.priority[idx] = prio
+        for sr, p in zip(srs, prio):
+            sr.priority = float(p)
+        return srs
+
+    def _admission_priorities(self, srs, idx: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Initial (base, priority) vectors for freshly admitted rows.
+
+        Bursts go through the policy's batched path when it has one; the
+        batched evaluators run on ``_ADMIT_BACKEND`` (float64 numpy)
+        regardless of the configured refresh backend, because admission
+        priorities are defined against the scalar oracle — the numpy
+        batch path is engineered bit-identical to it, while e.g. the
+        float32 Pallas kernel is not.  Scalar admits (B = 1) and
+        policies without a batch path take the scalar oracle directly.
+        """
+        pol = self.policy
+        st = self._state
         aging = getattr(pol, "time_varying", False) \
             and hasattr(pol, "base_priority") and hasattr(pol, "apply_age")
-        if self._state is not None and aging:
-            # one index evaluation, not two: derive the discounted
-            # priority from the cached base instead of recomputing
-            base = pol.base_priority(sr)
-            sr.priority = float(pol.apply_age(
-                base, sr.arrival, getattr(pol, "now", self._now)))
+        now = getattr(pol, "now", self._now)
+        if aging:
+            if pol.has_batch and hasattr(pol, "base_priority_batch"):
+                base = np.asarray(pol.base_priority_batch(
+                    st.view(idx), _ADMIT_BACKEND), np.float64)
+            else:
+                # one index evaluation, not two: derive the discounted
+                # priority from the cached base instead of recomputing
+                base = np.array([pol.base_priority(sr) for sr in srs],
+                                np.float64)
+            return base, np.asarray(pol.apply_age(base, st.arrival[idx],
+                                                  now), np.float64)
+        if pol.has_batch:
+            prio = np.asarray(pol.priority_batch(st.view(idx),
+                                                 _ADMIT_BACKEND), np.float64)
         else:
-            sr.priority = pol.priority(sr)
-            base = sr.priority
-        sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
-        self._live[request_id] = sr
-        if self._state is not None:
-            self._state.add(request_id, cost_dist, length_dist,
-                            arrival=sr.arrival, input_len=input_len,
-                            next_refresh=sr.next_refresh,
-                            priority=sr.priority, base_priority=base,
-                            node_id=node_id)
-        return sr
+            prio = np.array([pol.priority(sr) for sr in srs], np.float64)
+        return prio, prio
 
     def assign_node(self, request_id: str, node_id: int) -> None:
         """(Re-)bind a live request to a serving node — the router's write

@@ -78,11 +78,30 @@ class ServingEngine:
     # ------------------------------------------------------------ frontend
 
     def submit(self, request: ServeRequest) -> None:
-        self._requests[request.request_id] = request
-        request.arrival = time.monotonic() if request.arrival == 0.0 \
-            else request.arrival
-        self.scheduler.admit(request.request_id, request.prompt,
-                             request.input_len, arrival=request.arrival)
+        """Enqueue one request — the B = 1 case of ``submit_batch``."""
+        self.submit_batch([request])
+
+    def submit_batch(self, requests: list[ServeRequest]) -> None:
+        """Enqueue a burst of requests through one batched admission:
+        a single ``Scheduler.admit_batch`` call (one predict_batch over
+        the burst's prompts, one BatchState append).  Unstamped arrivals
+        (``arrival == 0.0``) share one clock reading — the burst arrived
+        together."""
+        if not requests:
+            return
+        now = time.monotonic()
+        arrivals = [now if r.arrival == 0.0 else r.arrival
+                    for r in requests]
+        # admit first: admit_batch rejects duplicates before mutating any
+        # state, so a failed burst leaves no ghost entries in _requests
+        self.scheduler.admit_batch(
+            [r.request_id for r in requests],
+            [r.prompt for r in requests],
+            [r.input_len for r in requests],
+            arrivals=arrivals)
+        for r, arrival in zip(requests, arrivals):
+            r.arrival = arrival
+            self._requests[r.request_id] = r
 
     def abort(self, request_id: str) -> None:
         r = self._requests.get(request_id)
@@ -190,20 +209,15 @@ class ServingEngine:
             toks[0, :len(ctx)] = ctx
             logits, cache = self._prefill_fn(self.params,
                                              {"tokens": jnp.asarray(toks)})
-            # logits at the true last position, not the padded one
-            # (prefill returns last-position logits; recompute from len)
             self._write_slot(cache, slot)
-            self._cache_len[slot] = len(ctx)
-            if r.generated == 0:
-                # first token comes from the prompt's last-position logits:
-                # since we padded, run one decode-like correction using the
-                # cache: simplest correct path: treat last prompt token as
-                # the next decode input (cache holds positions < len(ctx)).
-                self._cache_len[slot] = len(ctx) - 1
-                self._last_token[slot] = ctx[-1]
-            else:
-                self._cache_len[slot] = len(ctx) - 1
-                self._last_token[slot] = ctx[-1]
+            # the prefill ran over a padded buffer, so its last-position
+            # logits are not trustworthy; rewind one position and let the
+            # shared decode path re-emit from the true last context token
+            # (the cache holds positions < len(ctx)).  Identical for fresh
+            # prompts and recompute-mode readmissions — ctx already
+            # includes any previously generated tokens.
+            self._cache_len[slot] = len(ctx) - 1
+            self._last_token[slot] = ctx[-1]
             r.state = RequestState.RUNNING
             if rid not in self._running:
                 self._running.append(rid)

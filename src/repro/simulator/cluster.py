@@ -76,6 +76,15 @@ class Router:
     def route(self, req: SimRequest) -> int:
         raise NotImplementedError
 
+    def route_batch(self, reqs: list[SimRequest]) -> list[int]:
+        """Route a burst of same-tick arrivals.  Placement is inherently
+        sequential (each decision shifts the load the next one sees), so
+        the default loops ``route`` in input order; routers with an
+        expensive per-request stage (the cost router's prediction)
+        override this to batch that stage and keep only the cheap
+        placement loop sequential."""
+        return [self.route(r) for r in reqs]
+
     def on_complete(self, request_id: str, node_id: int) -> None:
         pass
 
@@ -102,6 +111,8 @@ class JoinShortestWorkRouter(Router):
         self._last_t = 0.0
 
     def route(self, req: SimRequest) -> int:
+        # no expensive per-request stage to amortize here, so the base
+        # class's sequential route_batch IS this router's burst form
         self.outstanding = np.maximum(
             0.0, self.outstanding
             - (req.arrival - self._last_t) * self.drain_rate)
@@ -133,19 +144,33 @@ class CostAwareRouter(Router):
         the slot mirror is exhausted, so overload spreads instead of
         funneling to whichever node's mirror froze first).
 
-    The router predicts once per request; the prediction is handed to
-    ``Scheduler.admit`` through the node view (``take_prediction``), so
-    the expensive semantic-history lookup is not paid twice.
+    The router predicts once per request — for a burst, once per request
+    in ONE ``predict_batch`` call (``route_batch``) — and the prediction
+    is handed to ``Scheduler.admit`` through the node view
+    (``take_prediction``), so the expensive semantic-history lookup is
+    not paid twice.
+
+    ``route_quantile=q`` routes on the q-quantile of the predicted cost
+    distribution instead of its mean (robust placement under prediction
+    uncertainty, arXiv:2508.14544): the support/probs are already
+    computed at route time, so the knob costs one searchsorted.
     """
 
     name = "cost"
 
     def __init__(self, n_nodes: int, predictor: Predictor,
                  cost_model: CostModel | None = None,
-                 spec: NodeSpec | None = None):
+                 spec: NodeSpec | None = None,
+                 route_quantile: float | None = None):
         self.n_nodes = n_nodes
         self.predictor = predictor
         self.cost_model = cost_model or ResourceBoundCost()
+        self.route_quantile = route_quantile
+        if route_quantile is not None:
+            if not 0.0 < route_quantile <= 1.0:
+                raise ValueError(f"route_quantile must be in (0, 1], "
+                                 f"got {route_quantile}")
+            self.name = f"cost@q{route_quantile:g}"
         spec = spec or NodeSpec()
         cap = spec.kv_capacity_tokens
         self.kv = [KVCacheManager(n_slots=spec.max_batch, max_seq_len=cap,
@@ -165,9 +190,24 @@ class CostAwareRouter(Router):
         return self._dist_of.pop(request_id, None)
 
     def route(self, req: SimRequest) -> int:
-        dist = self.predictor.predict(req.prompt, req.input_len)
-        cost = self.cost_model.distribution(
-            req.input_len, dist.lengths, dist.probs).mean
+        return self.route_batch([req])[0]
+
+    def route_batch(self, reqs: list[SimRequest]) -> list[int]:
+        """Batch the expensive stage — ONE ``predict_batch`` + cost
+        pushforward sweep over the burst — then place sequentially (each
+        placement charges the outstanding/KV state the next one sees)."""
+        if not reqs:
+            return []
+        dists = self.predictor.predict_many(
+            [r.prompt for r in reqs], [r.input_len for r in reqs])
+        cost_dists = self.cost_model.distribution_batch(
+            [r.input_len for r in reqs], dists)
+        return [self._place(r, dist, cd)
+                for r, dist, cd in zip(reqs, dists, cost_dists)]
+
+    def _place(self, req: SimRequest, dist, cost_dist) -> int:
+        cost = cost_dist.mean if self.route_quantile is None \
+            else cost_dist.quantile(self.route_quantile)
         need_kv = int(req.input_len + dist.mean)
         fits = np.array([self.kv[n].can_admit(need_kv)
                          for n in range(self.n_nodes)])
@@ -206,16 +246,28 @@ ROUTER_NAMES = ("jsow", "cost")
 
 def make_router(name, n_nodes: int, *, predictor: Predictor | None = None,
                 cost_model: CostModel | None = None,
-                spec: NodeSpec | None = None) -> Router:
-    """Resolve a router spec; instances pass through."""
+                spec: NodeSpec | None = None,
+                route_quantile: float | None = None) -> Router:
+    """Resolve a router spec; instances pass through.  ``route_quantile``
+    selects quantile-of-cost routing for the cost router (robust to
+    heavy-tailed predictions; only meaningful with ``name="cost"``)."""
     if isinstance(name, Router):
+        if route_quantile is not None:
+            raise ValueError("route_quantile cannot be applied to an "
+                             "already-constructed Router instance; pass "
+                             "CostAwareRouter(..., route_quantile=...) "
+                             "directly")
         return name
     if name == "jsow":
+        if route_quantile is not None:
+            raise ValueError("route_quantile only applies to the cost "
+                             "router")
         return JoinShortestWorkRouter(n_nodes)
     if name == "cost":
         if predictor is None:
             raise ValueError("cost router needs the central predictor")
-        return CostAwareRouter(n_nodes, predictor, cost_model, spec)
+        return CostAwareRouter(n_nodes, predictor, cost_model, spec,
+                               route_quantile=route_quantile)
     raise KeyError(f"unknown router {name!r}; have {ROUTER_NAMES}")
 
 
@@ -252,6 +304,19 @@ class NodeSchedulerView:
         return self.scheduler.admit(
             request_id, prompt, input_len, arrival=arrival,
             node_id=self.node_id if self.masked else -1, length_dist=ld)
+
+    def admit_batch(self, request_ids, prompts, input_lens, *,
+                    arrivals=None):
+        """Batched admission for a burst landing on this node: node-id
+        stamping + per-request reuse of route-time predictions, then one
+        ``Scheduler.admit_batch`` pass over the shared state."""
+        lds = None
+        if hasattr(self.router, "take_prediction"):
+            lds = [self.router.take_prediction(r) for r in request_ids]
+        return self.scheduler.admit_batch(
+            request_ids, prompts, input_lens, arrivals=arrivals,
+            node_ids=self.node_id if self.masked else -1,
+            length_dists=lds)
 
     def on_complete(self, request_id: str, output_len: int) -> None:
         self.scheduler.on_complete(request_id, output_len)
@@ -316,7 +381,8 @@ class ClusterScheduler:
 
     def __init__(self, scheduler: Scheduler | None = None,
                  n_nodes: int = 1, router="jsow",
-                 spec: NodeSpec | None = None):
+                 spec: NodeSpec | None = None,
+                 route_quantile: float | None = None):
         # explicit None-check: Scheduler defines __len__, so an *empty*
         # scheduler is falsy and `scheduler or Scheduler()` would silently
         # swap a caller's configured scheduler for a default one
@@ -325,7 +391,7 @@ class ClusterScheduler:
         self.router = make_router(router, n_nodes,
                                   predictor=self.scheduler.predictor,
                                   cost_model=self.scheduler.cost_model,
-                                  spec=spec)
+                                  spec=spec, route_quantile=route_quantile)
 
     def view(self, node_id: int) -> NodeSchedulerView:
         return NodeSchedulerView(self.scheduler, node_id, masked=True,
@@ -333,6 +399,11 @@ class ClusterScheduler:
 
     def route(self, req: SimRequest) -> int:
         return self.router.route(req)
+
+    def route_batch(self, reqs: list[SimRequest]) -> list[int]:
+        """Place a burst of same-tick arrivals: the router's expensive
+        stage (prediction) runs once, batched, for the whole burst."""
+        return self.router.route_batch(reqs)
 
     def refresh(self) -> int:
         return self.scheduler.refresh()
@@ -368,8 +439,8 @@ class ClusterResult:
 
 def simulate_cluster(requests: list[SimRequest], scheduler_factory,
                      n_nodes: int, spec: NodeSpec | None = None, *,
-                     router="jsow", shared_state: bool = True
-                     ) -> ClusterResult:
+                     router="jsow", shared_state: bool = True,
+                     route_quantile: float | None = None) -> ClusterResult:
     """Event-driven multi-node simulation under a central scheduler.
 
     Arrival, step-complete, and finish events interleave across nodes:
@@ -377,9 +448,12 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
     time — routing the next request once every busy node has caught up
     to its arrival, otherwise stepping the furthest-behind node one
     scheduling round (capped at the next global arrival, so routing
-    decisions always see live queue state).  Simultaneous arrivals are
-    processed in input order; node ties break by node index — both
-    deterministic (regression-tested).
+    decisions always see live queue state).  *Same-tick* arrivals (equal
+    timestamps) are coalesced into one burst: routed together through
+    ``Router.route_batch`` (one batched prediction for the cost router)
+    and admitted per node through ``admit_batch`` — still in input
+    order, so placement is deterministic.  Node ties break by node
+    index (regression-tested).
 
     shared_state=True (default): ``scheduler_factory()`` builds ONE
     scheduler whose BatchState holds the whole cluster's requests
@@ -387,18 +461,21 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
     private scheduler per node — the fanout baseline; under identical
     routing both modes produce identical request metrics
     (tests/test_cluster.py parity tests).
+
+    route_quantile: see ``CostAwareRouter`` (cost router only).
     """
     reqs = sorted(requests, key=lambda r: r.arrival)
     if shared_state:
         cs = ClusterScheduler(scheduler_factory(), n_nodes, router=router,
-                              spec=spec)
+                              spec=spec, route_quantile=route_quantile)
         router_obj = cs.router
         views = [cs.view(n) for n in range(n_nodes)]
     else:
         scheds = [scheduler_factory() for _ in range(n_nodes)]
         router_obj = make_router(router, n_nodes,
                                  predictor=scheds[0].predictor,
-                                 cost_model=scheds[0].cost_model, spec=spec)
+                                 cost_model=scheds[0].cost_model, spec=spec,
+                                 route_quantile=route_quantile)
         views = [NodeSchedulerView(scheds[n], n, masked=False,
                                    router=router_obj)
                  for n in range(n_nodes)]
@@ -412,11 +489,14 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
         t_next = reqs[i].arrival if i < n_req else float("inf")
         if i < n_req and (not busy
                           or t_next <= min(s.now for s in busy) + 1e-12):
-            r = reqs[i]
-            i += 1
-            nid = router_obj.route(r)
-            sims[nid].push(r)
-            per_node[nid] += 1
+            j = i + 1  # coalesce the same-tick burst (identical stamps)
+            while j < n_req and reqs[j].arrival <= t_next + 1e-12:
+                j += 1
+            burst = reqs[i:j]
+            i = j
+            for r, nid in zip(burst, router_obj.route_batch(burst)):
+                sims[nid].push(r)
+                per_node[nid] += 1
             continue
         if not busy:
             break

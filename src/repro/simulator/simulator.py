@@ -155,12 +155,23 @@ class NodeSimulator:
     # ------------------------------------------------------------- round
 
     def _admit_arrivals(self) -> None:
-        while (self._next < len(self._pending)
-               and self._pending[self._next].arrival <= self.now + 1e-12):
-            r = self._pending[self._next]
-            self._next += 1
-            self.scheduler.admit(r.request_id, r.prompt, r.input_len,
-                                 arrival=r.arrival)
+        """Admit every due pending arrival in ONE batched admission —
+        the scheduler's ``admit_batch`` predicts the whole burst with a
+        single batched history search and appends all rows in one
+        BatchState pass (bit-identical to sequential admits)."""
+        lo = self._next
+        hi = lo
+        while (hi < len(self._pending)
+               and self._pending[hi].arrival <= self.now + 1e-12):
+            hi += 1
+        if hi == lo:
+            return
+        self._next = hi
+        due = self._pending[lo:hi]
+        self.scheduler.admit_batch(
+            [r.request_id for r in due], [r.prompt for r in due],
+            [r.input_len for r in due], arrivals=[r.arrival for r in due])
+        for r in due:
             self._live[r.request_id] = _Live(
                 req=r,
                 metrics=RequestMetrics(

@@ -1,0 +1,442 @@
+"""Batch-first ingress (PR 3): admission parity, batched prediction,
+routing bursts.
+
+The load-bearing invariant of the redesign: the batch call is the
+primitive and the scalar call is its B = 1 case, and *both produce
+bit-identical state*.  ``admit_batch`` of N requests must yield exactly
+the BatchState (every column) and exactly the ``order()`` that N scalar
+``admit`` calls produce — for every predictor class and for both the
+numpy and pallas refresh backends.  That holds because
+
+  * the history search thresholds through a deterministic exact-recheck
+    band (``HistoryStore.threshold_matches``), so BLAS batch-shape
+    reduction differences can never flip a match;
+  * the proxy head uses non-optimized einsum (B-independent reduction
+    order) instead of a gemv/gemm pair;
+  * admission priorities always run on the float64 numpy evaluators,
+    which are bit-identical to the scalar oracle (PR 1).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CostDistribution, LengthDistribution,
+                        LengthHistoryPredictor, OraclePredictor,
+                        PointPredictor, ProxyModelPredictor,
+                        ResourceBoundCost, Scheduler,
+                        SemanticHistoryPredictor, make_policy)
+
+RNG = np.random.default_rng(7)
+WORDS = ("alpha beta gamma delta epsilon zeta eta theta iota kappa "
+         "lambda mu nu xi omicron pi rho sigma tau upsilon").split()
+POOL = [" ".join(RNG.choice(WORDS, size=12)) for _ in range(48)]
+
+
+def _seeded_semantic():
+    pred = SemanticHistoryPredictor()
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        for p in POOL:
+            pred.observe(p, 64, int(rng.integers(20, 1200)))
+    return pred
+
+
+def _seeded_length_history():
+    pred = LengthHistoryPredictor()
+    rng = np.random.default_rng(2)
+    for i in range(600):
+        pred.observe("", int(rng.integers(8, 800)),
+                     int(rng.integers(20, 1200)))
+    return pred
+
+
+def _seeded_proxy():
+    pred = ProxyModelPredictor(refit_every=64)
+    rng = np.random.default_rng(3)
+    for i in range(200):
+        topic = POOL[i % 8]
+        pred.observe(topic, 32, int(rng.integers(20, 1900)))
+    assert pred._W is not None
+    return pred
+
+
+def _seeded_oracle():
+    pred = OraclePredictor()
+    rng = np.random.default_rng(4)
+    for p in POOL:
+        k = int(rng.integers(1, 12))
+        lens = np.sort(rng.choice(np.arange(1, 2000), k, replace=False))
+        pred.register(p, LengthDistribution(lens, rng.dirichlet(np.ones(k))))
+    return pred
+
+
+PREDICTORS = {
+    "semantic": _seeded_semantic,
+    "length_history": _seeded_length_history,
+    "proxy": _seeded_proxy,
+    "oracle": _seeded_oracle,
+    "point": lambda: PointPredictor(_seeded_semantic()),
+}
+
+STATE_COLUMNS = ("cost_sup", "cost_probs", "len_sup", "len_probs",
+                 "generated", "attained", "arrival", "input_len",
+                 "next_refresh", "priority", "base_priority", "node_id",
+                 "cost_mean", "dirty")
+
+
+def _burst(n, seed=11):
+    rng = np.random.default_rng(seed)
+    prompts = [POOL[int(rng.integers(len(POOL)))] for _ in range(n)]
+    input_lens = [int(x) for x in rng.integers(8, 700, n)]
+    arrivals = [float(i) for i in range(n)]
+    return prompts, input_lens, arrivals
+
+
+def _state_cols(sched):
+    st = sched._state
+    return {c: getattr(st, c)[:st.n].copy() for c in STATE_COLUMNS}
+
+
+# ------------------------------------------------------ predict_batch parity
+
+@pytest.mark.parametrize("pred_name", sorted(PREDICTORS))
+def test_predict_batch_bit_identical_to_scalar(pred_name):
+    pred = PREDICTORS[pred_name]()
+    prompts, input_lens, _ = _burst(40)
+    batched = pred.predict_batch(prompts, input_lens)
+    for p, il, d in zip(prompts, input_lens, batched):
+        want = pred.predict(p, il)
+        np.testing.assert_array_equal(d.lengths, want.lengths)
+        np.testing.assert_array_equal(d.probs, want.probs)
+
+
+def test_predict_batch_empty_and_singleton():
+    pred = _seeded_semantic()
+    assert pred.predict_batch([], []) == []
+    (d,) = pred.predict_batch([POOL[0]], [64])
+    want = pred.predict(POOL[0], 64)
+    np.testing.assert_array_equal(d.lengths, want.lengths)
+    np.testing.assert_array_equal(d.probs, want.probs)
+
+
+def test_subclass_scalar_predict_override_beats_inherited_batch():
+    """A subclass of a built-in predictor that overrides only the scalar
+    ``predict`` must NOT have it bypassed by the inherited batch path:
+    ``has_batch`` goes False and batched callers loop the scalar
+    (mirrors Policy.has_batch)."""
+    marker = LengthDistribution(np.array([777]), np.array([1.0]))
+
+    class Tweaked(SemanticHistoryPredictor):
+        def predict(self, prompt, input_len):
+            return marker
+
+    pred = Tweaked()
+    assert SemanticHistoryPredictor().has_batch
+    assert not pred.has_batch
+    dists = pred.predict_many(POOL[:3], [8, 16, 32])
+    assert all(d is marker for d in dists)
+    # the scheduler's batched admission honors the override too
+    sched = Scheduler(predictor=pred)
+    srs = sched.admit_batch(["a", "b"], POOL[:2], [8, 16],
+                            arrivals=[0.0, 0.0])
+    assert all(sr.length_dist is marker for sr in srs)
+
+
+def test_predict_batch_empty_history_falls_back():
+    pred = SemanticHistoryPredictor()
+    dists = pred.predict_batch(POOL[:3], [8, 16, 32])
+    for d in dists:
+        assert list(d.lengths) == [pred.default_length]
+        assert d.probs[0] == 1.0
+
+
+# ------------------------------------------------------- admit_batch parity
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("pred_name", sorted(PREDICTORS))
+def test_admit_batch_bit_identical_to_scalar_admits(pred_name, backend):
+    """The acceptance criterion: every BatchState column, the live
+    ScheduledRequests, and order() agree exactly between one admit_batch
+    call and the equivalent scalar admit loop."""
+    pred = PREDICTORS[pred_name]()   # shared: predict() does not mutate
+    n = 40
+    prompts, input_lens, arrivals = _burst(n)
+    mk = lambda: Scheduler(predictor=pred, cost_model=ResourceBoundCost(),
+                           policy=make_policy("sagesched"),
+                           priority_backend=backend)
+    a, b = mk(), mk()
+    for i in range(n):
+        a.admit(f"r{i}", prompts[i], input_lens[i], arrival=arrivals[i],
+                node_id=i % 3)
+    b.admit_batch([f"r{i}" for i in range(n)], prompts, input_lens,
+                  arrivals=arrivals, node_ids=[i % 3 for i in range(n)])
+    ca, cb = _state_cols(a), _state_cols(b)
+    for col in STATE_COLUMNS:
+        np.testing.assert_array_equal(ca[col], cb[col], err_msg=col)
+    assert a._state.ids == b._state.ids
+    assert a._state.index == b._state.index
+    assert a._state.k == b._state.k
+    assert a.order() == b.order()
+    assert a.order(node_id=1) == b.order(node_id=1)
+    for i in range(n):
+        sa, sb = a.get(f"r{i}"), b.get(f"r{i}")
+        assert (sa.priority, sa.arrival, sa.next_refresh, sa.node_id) \
+            == (sb.priority, sb.arrival, sb.next_refresh, sb.node_id)
+        np.testing.assert_array_equal(sa.length_dist.lengths,
+                                      sb.length_dist.lengths)
+        np.testing.assert_array_equal(sa.cost_dist.support,
+                                      sb.cost_dist.support)
+        np.testing.assert_array_equal(sa.cost_dist.probs,
+                                      sb.cost_dist.probs)
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "fastserve", "ssjf", "ltr",
+                                    "trail", "mean", "gittins",
+                                    "sagesched", "sagesched_aged"])
+def test_admit_batch_parity_across_policies(policy):
+    pred = _seeded_semantic()
+    n = 24
+    prompts, input_lens, arrivals = _burst(n, seed=23)
+    mk = lambda: Scheduler(predictor=pred, policy=make_policy(policy),
+                           priority_backend="numpy")
+    a, b = mk(), mk()
+    for i in range(n):
+        a.admit(f"r{i}", prompts[i], input_lens[i], arrival=arrivals[i])
+    b.admit_batch([f"r{i}" for i in range(n)], prompts, input_lens,
+                  arrivals=arrivals)
+    ca, cb = _state_cols(a), _state_cols(b)
+    for col in STATE_COLUMNS:
+        np.testing.assert_array_equal(ca[col], cb[col], err_msg=col)
+    assert a.order() == b.order()
+
+
+def test_admit_batch_empty_is_a_noop():
+    sched = Scheduler(predictor=_seeded_semantic())
+    assert sched.admit_batch([], [], []) == []
+    assert len(sched) == 0
+    assert sched.order() == []
+    assert sched.stats["predictions"] == 0
+
+
+def test_admit_batch_single_element_equals_scalar():
+    pred = _seeded_semantic()
+    a = Scheduler(predictor=pred)
+    b = Scheduler(predictor=pred)
+    sa = a.admit("x", POOL[0], 64, arrival=1.0)
+    (sb,) = b.admit_batch(["x"], [POOL[0]], [64], arrivals=[1.0])
+    assert sa.priority == sb.priority
+    assert sa.arrival == sb.arrival
+    assert sa.next_refresh == sb.next_refresh
+    for col in STATE_COLUMNS:
+        np.testing.assert_array_equal(getattr(a._state, col)[:1],
+                                      getattr(b._state, col)[:1],
+                                      err_msg=col)
+
+
+def test_admit_batch_duplicate_ids_reject_before_mutation():
+    sched = Scheduler(predictor=_seeded_semantic())
+    sched.admit("a", POOL[0], 32, arrival=0.0)
+    # duplicate against live state
+    with pytest.raises(KeyError):
+        sched.admit_batch(["b", "a"], POOL[:2], [8, 8], arrivals=[1.0, 1.0])
+    # duplicate within the burst
+    with pytest.raises(KeyError):
+        sched.admit_batch(["c", "c"], POOL[:2], [8, 8], arrivals=[1.0, 1.0])
+    assert len(sched) == 1          # nothing from the rejected bursts
+    assert sched._state.n == 1
+
+
+def test_admit_batch_mixed_provided_predictions():
+    """None entries in length_dists are predicted (batched); provided
+    entries are used verbatim and not counted as predictions."""
+    pred = _seeded_semantic()
+    sched = Scheduler(predictor=pred)
+    given = LengthDistribution(np.array([123]), np.array([1.0]))
+    srs = sched.admit_batch(["a", "b", "c"], POOL[:3], [32, 48, 64],
+                            arrivals=[0.0, 0.0, 0.0],
+                            length_dists=[None, given, None])
+    assert sched.stats["predictions"] == 2
+    assert srs[1].length_dist is given
+    assert list(srs[0].length_dist.lengths) != [123]
+
+
+def test_admit_batch_object_backend_matches_scalar():
+    pred = _seeded_semantic()
+    n = 16
+    prompts, input_lens, arrivals = _burst(n, seed=5)
+    a = Scheduler(predictor=pred, priority_backend="object")
+    b = Scheduler(predictor=pred, priority_backend="object")
+    for i in range(n):
+        a.admit(f"r{i}", prompts[i], input_lens[i], arrival=arrivals[i])
+    b.admit_batch([f"r{i}" for i in range(n)], prompts, input_lens,
+                  arrivals=arrivals)
+    assert a.order() == b.order()
+    for i in range(n):
+        assert a.get(f"r{i}").priority == b.get(f"r{i}").priority
+
+
+# ----------------------------------------------------------- cost quantile
+
+def test_cost_distribution_quantile():
+    cd = CostDistribution(np.array([10.0, 100.0, 1000.0]),
+                          np.array([0.5, 0.4, 0.1]))
+    assert cd.quantile(0.5) == 10.0
+    assert cd.quantile(0.9) == 100.0
+    assert cd.quantile(0.95) == 1000.0
+    assert cd.quantile(1.0) == 1000.0  # rounding-shortfall clip
+
+
+def test_distribution_batch_matches_scalar():
+    cm = ResourceBoundCost()
+    rng = np.random.default_rng(9)
+    dists, ils = [], []
+    for _ in range(20):
+        k = int(rng.integers(1, 16))
+        lens = np.sort(rng.choice(np.arange(1, 3000), k, replace=False))
+        dists.append(LengthDistribution(lens, rng.dirichlet(np.ones(k))))
+        ils.append(int(rng.integers(1, 900)))
+    batched = cm.distribution_batch(ils, dists)
+    for il, ld, cd in zip(ils, dists, batched):
+        want = cm.distribution(il, ld.lengths, ld.probs)
+        np.testing.assert_array_equal(cd.support, want.support)
+        np.testing.assert_array_equal(cd.probs, want.probs)
+
+
+# ------------------------------------------------------------ router bursts
+
+from repro.simulator import (CostAwareRouter, JoinShortestWorkRouter,  # noqa: E402
+                             generate_workload, make_profile, make_router,
+                             simulate_cluster)
+from repro.simulator.workload import SimRequest  # noqa: E402
+
+PROFILES = [make_profile(n) for n in ("sharegpt", "alpaca")]
+
+
+def _sim_req(i, arrival, input_len=64, output_len=24, prompt=None):
+    c = PROFILES[0].clusters[0]
+    return SimRequest(request_id=f"r{i:04d}", arrival=arrival,
+                      prompt=prompt or c.sample_prompt(
+                          np.random.default_rng(i)),
+                      input_len=input_len, true_output_len=output_len,
+                      dataset="sharegpt", cluster=c)
+
+
+def test_jsow_route_batch_matches_sequential():
+    reqs = [_sim_req(i, arrival=0.25 * (i // 3), input_len=16 + 7 * i)
+            for i in range(12)]           # mixed same-tick / spaced
+    a, b = JoinShortestWorkRouter(3), JoinShortestWorkRouter(3)
+    assert a.route_batch(reqs) == [b.route(r) for r in reqs]
+    np.testing.assert_array_equal(a.outstanding, b.outstanding)
+
+
+def test_cost_route_batch_matches_sequential():
+    pred = _seeded_semantic()
+    a, b = CostAwareRouter(3, pred), CostAwareRouter(3, pred)
+    reqs = [_sim_req(i, arrival=0.0, input_len=32 + 5 * i,
+                     prompt=POOL[i % len(POOL)]) for i in range(10)]
+    got = a.route_batch(reqs)
+    want = [b.route(r) for r in reqs]
+    assert got == want
+    np.testing.assert_array_equal(a.outstanding, b.outstanding)
+    # route-time predictions are staged for admit on both paths
+    for r in reqs:
+        assert a.take_prediction(r.request_id) is not None
+
+
+def test_route_quantile_charges_the_quantile():
+    o = _seeded_oracle()
+    heavy = LengthDistribution(np.array([10, 1000]), np.array([0.9, 0.1]))
+    o.register("tail prompt", heavy)
+    cm = ResourceBoundCost()
+    cd = cm.distribution(50, heavy.lengths, heavy.probs)
+    r_mean = CostAwareRouter(2, o, cost_model=cm)
+    r_q = CostAwareRouter(2, o, cost_model=cm, route_quantile=0.95)
+    assert r_q.name == "cost@q0.95"
+    req = _sim_req(0, 0.0, input_len=50, prompt="tail prompt")
+    n1 = r_mean.route(req)
+    n2 = r_q.route(_sim_req(1, 0.0, input_len=50, prompt="tail prompt"))
+    assert r_mean.outstanding[n1] == pytest.approx(cd.mean)
+    assert r_q.outstanding[n2] == pytest.approx(cd.quantile(0.95))
+    assert cd.quantile(0.95) > 5 * cd.mean   # the tail dominates
+
+
+def test_make_router_route_quantile_validation():
+    pred = _seeded_semantic()
+    r = make_router("cost", 2, predictor=pred, route_quantile=0.9)
+    assert isinstance(r, CostAwareRouter) and r.route_quantile == 0.9
+    with pytest.raises(ValueError):
+        make_router("jsow", 2, route_quantile=0.9)
+    with pytest.raises(ValueError):
+        CostAwareRouter(2, pred, route_quantile=1.5)
+    # a pre-built instance must not silently swallow the knob
+    with pytest.raises(ValueError):
+        make_router(CostAwareRouter(2, pred), 2, route_quantile=0.9)
+
+
+def test_simulate_cluster_route_quantile_end_to_end():
+    reqs = generate_workload(PROFILES, 60, rps=20.0, seed=17)
+    res = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched")), 2,
+        router="cost", route_quantile=0.9)
+    assert res.router == "cost@q0.9"
+    assert len(res.metrics) == 60
+    assert all(np.isfinite(m.ttlt) for m in res.metrics)
+
+
+def test_same_tick_bursts_shared_equals_fanout():
+    """Coalesced same-tick bursts (route_batch + admit_batch) keep the
+    shared-BatchState and per-node-fanout modes metric-identical."""
+    rng = np.random.default_rng(31)
+    reqs = [_sim_req(i, arrival=float(i // 4),   # bursts of 4 per tick
+                     input_len=int(rng.integers(16, 256)),
+                     output_len=int(rng.integers(8, 64)))
+            for i in range(48)]
+    pred_a, pred_b = _seeded_semantic(), _seeded_semantic()
+    shared = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched"),
+                                predictor=pred_a), 3, router="cost")
+    fanout = simulate_cluster(
+        reqs, lambda: Scheduler(policy=make_policy("sagesched"),
+                                predictor=pred_b), 3, router="cost",
+        shared_state=False)
+    key = lambda res: sorted((m.request_id, m.node_id, m.ttft, m.ttlt)
+                             for m in res.metrics)
+    assert key(shared) == key(fanout)
+    assert shared.requests_per_node == fanout.requests_per_node
+
+
+# ------------------------------------------------------- engine submit_batch
+
+def test_engine_submit_batch_completes():
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import RequestState, ServeRequest, ServingEngine
+
+    cfg = get_config("llama3.2-1b", reduced=True)
+    eng = ServingEngine(model=build_model(cfg),
+                        scheduler=Scheduler(policy=make_policy("sagesched")),
+                        n_slots=4, max_seq_len=96, seed=0)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(5):
+        toks = [int(t) for t in rng.integers(3, cfg.vocab_size,
+                                             int(rng.integers(4, 12)))]
+        reqs.append(ServeRequest(request_id=f"r{i}",
+                                 prompt=f"prompt {i} topic {i % 2}",
+                                 prompt_tokens=toks, max_new_tokens=8,
+                                 eos_token=0, arrival=float(i) * 1e-3))
+    eng.submit_batch(reqs)
+    assert all(f"r{i}" in eng.scheduler for i in range(5))
+    assert eng.scheduler.stats["predictions"] == 5
+    # a rejected burst (duplicate id) must leave no ghost registrations
+    dup = ServeRequest(request_id="r0", prompt="dup",
+                       prompt_tokens=[3, 4], max_new_tokens=4)
+    fresh = ServeRequest(request_id="fresh", prompt="fresh",
+                         prompt_tokens=[3, 4], max_new_tokens=4)
+    with pytest.raises(KeyError):
+        eng.submit_batch([fresh, dup])
+    assert "fresh" not in eng._requests
+    assert "fresh" not in eng.scheduler
+    eng.run_until_done(max_steps=500)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert eng.metrics.completed == 5
