@@ -1,0 +1,145 @@
+"""Engine-level execution benchmark: the memory-hybrid serving layer.
+
+Two experiments on the REAL JAX engine (reduced llama config, CPU):
+
+  * preemption — the same oversubscribed workload under swap-mode vs
+    recompute-mode preemption.  Swap restores KV from the host pool
+    instead of re-prefilling, so the interesting numbers are the
+    re-prefilled tokens recompute pays (``reprefill_tokens``) vs the
+    modeled swap IO swap-mode pays (``modeled_swap_s``, priced by the
+    same ServiceModel.swap_time / block accounting the simulator uses).
+
+  * prefill — chunked (Sarathi) vs atomic prefill on a workload with
+    long prompts landing on a busy decode batch: records TTFT
+    percentiles and inter-token latency.  On this CPU testbed the
+    wall-clock numbers carry jit-compile noise; the trajectory metric is
+    the *relative* chunked/atomic shape, not the absolute seconds.
+
+Results merge into BENCH_scheduler.json under the ``engine`` key (the
+scheduler benchmark owns the rest of the file).
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        make_policy)
+from repro.models import build_model
+from repro.serving import ServeRequest, ServingEngine
+
+
+def _workload(cfg, n, prompt_len, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        toks = [int(t) for t in rng.integers(3, cfg.vocab_size,
+                                             prompt_len)]
+        reqs.append(ServeRequest(
+            request_id=f"r{i}", prompt=f"bench prompt {i}",
+            prompt_tokens=toks, max_new_tokens=max_new,
+            temperature=0.0, eos_token=1))   # arrival stamped at submit
+    return reqs
+
+
+def _oracle(n, max_new):
+    o = OraclePredictor()
+    for i in range(n):
+        o.register(f"bench prompt {i}", LengthDistribution(
+            np.array([max_new]), np.array([1.0])))
+    return o
+
+
+def _run(cfg, reqs, *, mode="swap", chunk=None, cap=None, n_slots=2,
+         policy="sagesched", max_new=12):
+    eng = ServingEngine(
+        model=build_model(cfg),
+        scheduler=Scheduler(policy=make_policy(policy),
+                            predictor=_oracle(len(reqs), max_new)),
+        n_slots=n_slots, max_seq_len=192, capacity_tokens=cap,
+        block_size=8, preemption_mode=mode, prefill_chunk=chunk, seed=0)
+    eng.submit_batch(reqs)
+    t0 = time.perf_counter()
+    eng.run_until_done(max_steps=20_000)
+    wall = time.perf_counter() - t0
+    s = eng.metrics.summary(reqs)
+    s["wall_s"] = wall
+    return eng, s
+
+
+def bench_preemption(smoke: bool) -> dict:
+    """Swap vs recompute under forced preemption (tight KV budget)."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    n, max_new, cap = (6, 12, 48) if smoke else (10, 20, 64)
+    out = {}
+    token_streams = {}
+    for mode in ("swap", "recompute"):
+        reqs = _workload(cfg, n, prompt_len=10, max_new=max_new)
+        eng, s = _run(cfg, reqs, mode=mode, cap=cap, max_new=max_new)
+        token_streams[mode] = [r.output_tokens for r in reqs]
+        out[mode] = {
+            "wall_s": s["wall_s"],
+            "preemptions": eng.metrics.preemptions,
+            "prefills": eng.metrics.prefills,
+            "prefill_tokens": eng.metrics.prefill_tokens,
+            "swap_ins": eng.metrics.swap_ins,
+            "modeled_swap_s": eng.metrics.modeled_swap_s,
+            "mean_ttlt_s": s["mean_ttlt_s"],
+        }
+    out["token_identical"] = \
+        token_streams["swap"] == token_streams["recompute"]
+    out["reprefill_tokens_saved"] = (out["recompute"]["prefill_tokens"]
+                                     - out["swap"]["prefill_tokens"])
+    return out
+
+
+def bench_prefill(smoke: bool) -> dict:
+    """Chunked vs atomic prefill TTFT under prompt-heavy load."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    n, plen, chunk = (5, 48, 16) if smoke else (8, 96, 32)
+    out = {}
+    for name, ch in (("atomic", None), ("chunked", chunk)):
+        reqs = _workload(cfg, n, prompt_len=plen, max_new=8, seed=1)
+        eng, s = _run(cfg, reqs, mode="swap", chunk=ch, n_slots=4,
+                      policy="fcfs", max_new=8)
+        out[name] = {
+            "wall_s": s["wall_s"],
+            "p50_ttft_s": s["p50_ttft_s"],
+            "p95_ttft_s": s["p95_ttft_s"],
+            "mean_itl_s": s["mean_itl_s"],
+            "prefill_chunks": eng.metrics.prefill_chunks,
+        }
+    out["chunk_tokens"] = chunk
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: minimal sizes")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_scheduler.json"))
+    args = ap.parse_args(argv)
+
+    engine = {
+        "preemption": bench_preemption(args.smoke),
+        "prefill": bench_prefill(args.smoke),
+    }
+    path = Path(args.out)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["engine"] = engine
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(json.dumps(engine, indent=2, sort_keys=True))
+    return engine
+
+
+if __name__ == "__main__":
+    main()

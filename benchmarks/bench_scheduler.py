@@ -369,7 +369,17 @@ def main(argv=None) -> dict:
             "sublinearity": sublinearity,
         },
     }
-    Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    out_path = Path(args.out)
+    doc = {}
+    if out_path.exists():
+        try:
+            doc = json.loads(out_path.read_text())
+        except (json.JSONDecodeError, OSError):
+            doc = {}
+    # merge: other benchmarks (bench_engine.py's "engine" section) own
+    # their top-level keys in the same trajectory file
+    doc.update(payload)
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"wrote {args.out}")
     return payload
 

@@ -15,7 +15,7 @@ from .backends import (BACKEND_NAMES, BatchView, NumpyPriorityBackend,
 from .cost_model import (CostDistribution, CostModel, EncDecCost, HybridCost,
                          LinearCost, OutputLengthCost, OverallLengthCost,
                          ResourceBoundCost, bucketize_support,
-                         make_cost_model)
+                         eviction_scores, make_cost_model)
 from .embedding import PromptEmbedder
 from .gittins import (gittins_index, gittins_index_batch, mean_index,
                       mean_index_batch)
@@ -30,7 +30,8 @@ from .scheduler import BatchState, ScheduledRequest, Scheduler
 __all__ = [
     "CostDistribution", "CostModel", "EncDecCost", "HybridCost", "LinearCost",
     "OutputLengthCost", "OverallLengthCost", "ResourceBoundCost",
-    "bucketize_support", "make_cost_model", "PromptEmbedder",
+    "bucketize_support", "eviction_scores", "make_cost_model",
+    "PromptEmbedder",
     "gittins_index", "gittins_index_batch", "mean_index", "mean_index_batch",
     "BACKEND_NAMES", "BatchView", "NumpyPriorityBackend",
     "PallasPriorityBackend", "PriorityBackend", "make_priority_backend",

@@ -41,9 +41,39 @@ __all__ = [
     "EncDecCost",
     "CostDistribution",
     "bucketize_support",
+    "eviction_scores",
     "make_cost_model",
     "quantile_index",
 ]
+
+
+def eviction_scores(ranks: np.ndarray, swap_costs: np.ndarray,
+                    memory_weight: float) -> np.ndarray:
+    """Capacity-forced-eviction scores — HIGHER means evict FIRST.
+
+    The paper's hybrid true-service-cost says preempting a request is not
+    free: its KV must be swapped back in before it can resume, so the
+    eviction decision should weigh *service urgency* (the policy's
+    priority ranking) against the *memory-restoration cost* (held KV
+    bytes ~ predicted swap IO — ``ServiceModel.swap_time`` is affine in
+    held bytes, so the two terms merge into one).  Both terms are
+    normalized to [0, 1], making the trade-off scale-free across cost
+    models whose raw priorities live in arbitrary units:
+
+        score = rank / (n-1)  -  memory_weight * swap / max(swap)
+
+    ``ranks``: position in the policy's order() (0 = most urgent);
+    ``swap_costs``: predicted restore cost per candidate (seconds, or
+    held tokens/bytes as a proxy); ``memory_weight = 0`` reduces to
+    pure reversed priority order (the vLLM baseline).
+    """
+    ranks = np.asarray(ranks, np.float64)
+    n = ranks.shape[0]
+    rank_norm = ranks / max(1, n - 1)
+    swap = np.asarray(swap_costs, np.float64)
+    top = swap.max()
+    swap_norm = swap / top if top > 0 else np.zeros_like(swap)
+    return rank_norm - float(memory_weight) * swap_norm
 
 
 def quantile_index(probs: np.ndarray, q: float) -> int:

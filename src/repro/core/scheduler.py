@@ -55,7 +55,7 @@ import numpy as np
 from .backends import (BatchView, NumpyPriorityBackend,
                        make_priority_backend)
 from .cost_model import (CostDistribution, CostModel, ResourceBoundCost,
-                         bucketize_support)
+                         bucketize_support, eviction_scores)
 from .policies import Policy, SageSchedPolicy
 from .predictor import LengthDistribution, Predictor, SemanticHistoryPredictor
 
@@ -742,6 +742,43 @@ class Scheduler:
         id_arr = np.empty(len(ids), object)
         id_arr[:] = ids
         return id_arr[np.lexsort((arr, prio))].tolist()
+
+    def eviction_order(self, request_ids, *, held_tokens,
+                       swap_cost=None, memory_weight: float = 0.0
+                       ) -> list[str]:
+        """Rank ``request_ids`` for *capacity-forced eviction*: the first
+        id is the best victim.  With ``memory_weight = 0`` this is
+        exactly ``order()`` reversed (evict the least urgent — the vLLM
+        baseline).  A positive weight adds the paper's memory half of the
+        hybrid service cost: among similarly-urgent candidates, prefer
+        victims whose KV is cheap to restore (small held footprint /
+        swap IO), because the preemption's true cost includes paying
+        that IO on readmission.  Shared by the real engine and the
+        simulator so both layers evict under ONE preemption cost model.
+
+        held_tokens: mapping rid -> resident KV tokens;
+        swap_cost: callable tokens -> predicted restore cost (e.g.
+        ``ServiceModel.swap_time``); None falls back to held tokens
+        (∝ KV bytes) as the proxy — swap_time is affine in bytes, so
+        the ranking is identical whenever every candidate shares one
+        node spec.
+        """
+        ids = list(request_ids)
+        if not ids:
+            return []
+        ordered = self.order(ids)            # most urgent first
+        if memory_weight <= 0.0 or len(ids) == 1:
+            return ordered[::-1]
+        rank = {rid: j for j, rid in enumerate(ordered)}
+        ranks = np.fromiter((rank[r] for r in ids), np.float64, len(ids))
+        held = np.fromiter((float(held_tokens[r]) for r in ids),
+                           np.float64, len(ids))
+        costs = np.array([swap_cost(t) for t in held], np.float64) \
+            if swap_cost is not None else held
+        scores = eviction_scores(ranks, costs, memory_weight)
+        # ties (same score) break toward the less urgent candidate
+        sort = np.lexsort((-ranks, -scores))
+        return [ids[i] for i in sort]
 
     def _order_object(self, request_ids, running, hysteresis,
                       pin_running, node_id=None) -> list[str]:

@@ -7,10 +7,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_kernel
-from .ref import decode_attention_reference
+from .kernel import decode_attention_kernel, decode_attention_paged_kernel
+from .ref import (decode_attention_paged_reference,
+                  decode_attention_reference)
 
-__all__ = ["decode_attention_op"]
+__all__ = ["decode_attention_op", "decode_attention_paged_op"]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s",
@@ -35,3 +36,18 @@ def decode_attention_op(q, k_cache, v_cache, cache_len, *, window: int = 0,
     return decode_attention_kernel(
         q, k_cache, v_cache, cache_len.astype(jnp.int32),
         window=window, block_s=blk, interpret=not native)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "force_pallas"))
+def decode_attention_paged_op(q, k_pool, v_pool, block_tables, cache_len, *,
+                              window: int = 0, force_pallas: bool = False):
+    """Paged flash-decode: q (B, H, dh); pools (n_pages, page, KV, dh);
+    block_tables (B, P) int32; cache_len (B,).  The kernel's KV grid step
+    is the page itself — block tables replace any padding logic."""
+    native = jax.default_backend() == "tpu"
+    if not native and not force_pallas:
+        return decode_attention_paged_reference(
+            q, k_pool, v_pool, block_tables, cache_len, window=window)
+    return decode_attention_paged_kernel(
+        q, k_pool, v_pool, block_tables.astype(jnp.int32),
+        cache_len.astype(jnp.int32), window=window, interpret=not native)

@@ -13,7 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gqa_attention", "decode_attention", "encoder_attention"]
+__all__ = ["gqa_attention", "decode_attention", "decode_attention_paged",
+           "encoder_attention"]
 
 _NEG = -1e30
 
@@ -90,6 +91,53 @@ def gqa_attention(q, k, v, *, causal: bool = True, window: int = 0,
         (jnp.moveaxis(kt, 1, 0), jnp.moveaxis(vt, 1, 0), k_pos))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(q.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
+                           window: int = 0):
+    """One-token decode attention over a *paged* KV pool (vLLM block-table
+    indirection, jnp twin of repro.kernels.decode_attention's paged
+    kernel).
+
+    q: (B, 1, H, dh); k_pool/v_pool: (n_pages, page, KV, dh) — one pool
+    shared by the whole batch; block_tables: (B, P) int32 mapping logical
+    page ``j`` of row ``b`` to its physical page (page 0 is the engine's
+    scratch block); cache_len: (B,) valid tokens.  Logical capacity per
+    row is P * page.  ``window > 0`` is a *logical* sliding window
+    (positions in [cache_len - window, cache_len)) — paged caches keep
+    every block resident instead of ring-wrapping.
+    Returns (B, 1, H, dh).
+    """
+    b = q.shape[0]
+    n_pages, page, kvh, dh = k_pool.shape
+    h = q.shape[2]
+    rep = h // kvh
+    p_max = block_tables.shape[1]
+    s_log = p_max * page
+    scale = dh ** -0.5
+    # gather each row's logical cache from the pool (reference path; the
+    # Pallas kernel streams physical pages instead of materializing this)
+    tok = (block_tables.astype(jnp.int32) * page)[:, :, None] \
+        + jnp.arange(page, dtype=jnp.int32)[None, None, :]   # (B, P, page)
+    tok = tok.reshape(b, s_log)
+    k = k_pool.reshape(n_pages * page, kvh, dh)[tok]         # (B, S, KV, dh)
+    v = v_pool.reshape(n_pages * page, kvh, dh)[tok]
+    qg = q.reshape(b, 1, kvh, rep, dh)
+    # numerics mirror decode_attention exactly (f32 scores, unnormalized
+    # exp, late divide) so paged and dense decode are step-parity equal
+    scores = jnp.einsum("bqkrd,bskd->bqkrs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(s_log)
+    valid = idx[None, :] < cache_len[:, None]                # (B, S)
+    if window > 0:
+        valid &= idx[None, :] >= cache_len[:, None] - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
 def encoder_attention(q, k, v, *, kv_mask=None):

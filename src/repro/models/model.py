@@ -23,8 +23,10 @@ from .config import ModelConfig
 from .encdec import (encdec_cache_shapes, encdec_decode_step, encdec_forward,
                      encdec_template)
 from .layers import init_from_template, specs_from_template
-from .transformer import (decoder_decode_step, decoder_forward,
-                          decoder_template, init_cache_shapes, lm_loss)
+from .transformer import (decoder_decode_step, decoder_decode_step_paged,
+                          decoder_forward, decoder_prefill_chunk,
+                          decoder_template, init_cache_shapes,
+                          lm_loss, paged_cache_shapes)
 
 __all__ = ["Model", "build_model"]
 
@@ -97,6 +99,45 @@ class Model:
     def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_shapes(batch, max_len, enc_len))
+
+    # ----------------------------------------------------- paged serving
+
+    @property
+    def supports_paged(self) -> bool:
+        """Can this model decode through a block-table KV pool?  Every
+        decoder family qualifies (SSM state is per-slot, not paged);
+        encdec needs its encoder cross-cache and stays dense."""
+        return self.cfg.family != "encdec"
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Sarathi-style chunk-at-a-time prefill needs attention KV for
+        the prefix — SSM/hybrid recurrent state can't replay a chunk."""
+        return self.cfg.family in ("dense", "vlm", "moe")
+
+    def paged_cache_shapes(self, n_pages: int, page_size: int,
+                           n_slots: int):
+        return paged_cache_shapes(self.cfg, n_pages, page_size, n_slots)
+
+    def init_paged_cache(self, n_pages: int, page_size: int, n_slots: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.paged_cache_shapes(n_pages, page_size,
+                                                    n_slots))
+
+    def decode_step_paged(self, params, token, cache, cache_len,
+                          block_tables, *, page_size: int):
+        """Paged decode step.  token: (B,1); cache_len: (B,);
+        block_tables: (B, P) int32.  Returns ((B,V) logits, cache)."""
+        logits, cache = decoder_decode_step_paged(
+            params, self.cfg, token, cache, cache_len, block_tables,
+            page_size=page_size)
+        return logits[:, -1, :], cache
+
+    def prefill_chunk(self, params, tokens, past_k, past_v, start):
+        """One prefill chunk against the cached prefix; returns the
+        chunk's (k, v): (L, 1, C, KV, dh) for the engine to scatter."""
+        return decoder_prefill_chunk(params, self.cfg, tokens,
+                                     past_k, past_v, start)
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..sharding.context import constrain_activations, constrain_heads
-from .attention import decode_attention, gqa_attention
+from .attention import decode_attention, decode_attention_paged, gqa_attention
 from .config import ModelConfig
 from .layers import (ParamSpec, apply_rope, attention_template, linear, mlp,
                      mlp_template, norm_template, rms_norm)
@@ -21,7 +21,8 @@ from .ssm import (mamba2_block, mamba2_decode_step, ssm_state_shape,
                   ssm_template)
 
 __all__ = ["decoder_template", "decoder_forward", "decoder_decode_step",
-           "init_cache_shapes", "lm_loss"]
+           "decoder_decode_step_paged", "decoder_prefill_chunk",
+           "init_cache_shapes", "paged_cache_shapes", "lm_loss"]
 
 
 # ------------------------------------------------------------------ template
@@ -367,3 +368,242 @@ def lm_loss(logits, labels, mask=None):
         return nll.mean()
     mask = mask.astype(jnp.float32)
     return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------- paged serving
+
+def paged_cache_shapes(cfg: ModelConfig, n_pages: int, page_size: int,
+                       n_slots: int):
+    """Decode-cache shapes for the *paged* serving layout: attention KV
+    lives in one (L, n_pages, page, KV, dh) pool shared by the whole
+    batch (block-table indirection maps logical positions to physical
+    pages; page 0 is the engine's scratch block), while SSM state — a
+    constant-size recurrence, nothing to page — stays per decode slot."""
+    dh, kv = cfg.head_dim, cfg.n_kv_heads
+    out = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        shape = (cfg.n_layers, n_pages, page_size, kv, dh)
+        out["k"] = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        out["v"] = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        ss = ssm_state_shape(cfg, n_slots)
+        out["ssm"] = {
+            "ssd": jax.ShapeDtypeStruct((cfg.n_layers,) + ss["ssd"],
+                                        jnp.float32),
+            "conv": jax.ShapeDtypeStruct((cfg.n_layers,) + ss["conv"],
+                                         jnp.bfloat16),
+        }
+    if cfg.family == "hybrid":
+        groups = -(-cfg.n_layers // cfg.hybrid_attn_every)
+        shape = (groups, n_pages, page_size, kv, dh)
+        out["k"] = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        out["v"] = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    if cfg.family == "encdec":
+        raise ValueError("paged serving does not support encdec")
+    return out
+
+
+def _attn_decode_paged(cfg, p, h, k_pool, v_pool, cache_len, block_tables,
+                       *, window: int, page: int):
+    """h: (B,1,D); pools (n_pages, page, KV, dh).  Writes this step's KV
+    at each row's logical position through its block table (inactive rows
+    point at the scratch page), then reads via paged flash-decode.
+    ``window`` is a logical sliding window — no ring wrap."""
+    b = h.shape[0]
+    n_pages = k_pool.shape[0]
+    q = linear(p["wq"], h, p.get("bq")).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], h, p.get("bk")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], h, p.get("bv")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    pos = cache_len[:, None]                              # (B,1) true position
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    logical = cache_len.astype(jnp.int32)
+    phys = block_tables[jnp.arange(b), logical // page] * page \
+        + logical % page                                  # (B,) flat token idx
+    flat = (n_pages * page,) + k_pool.shape[2:]
+    k_pool = k_pool.reshape(flat).at[phys].set(
+        k[:, 0].astype(k_pool.dtype)).reshape(k_pool.shape)
+    v_pool = v_pool.reshape(flat).at[phys].set(
+        v[:, 0].astype(v_pool.dtype)).reshape(v_pool.shape)
+    o = decode_attention_paged(q, k_pool, v_pool, block_tables,
+                               cache_len + 1, window=window)
+    return linear(p["wo"], o.reshape(b, 1, -1)), k_pool, v_pool
+
+
+def decoder_decode_step_paged(params, cfg: ModelConfig, token, cache,
+                              cache_len, block_tables, *, page_size: int):
+    """One decode step over a paged KV pool.  token: (B,1) int32;
+    cache_len: (B,) int32; block_tables: (B, P) int32 physical-page ids.
+    Returns (logits (B,1,V), new_cache).  SSM families carry their
+    (unpaged, per-slot) recurrent state unchanged in layout."""
+    if cfg.family == "ssm":
+        # attention-free: nothing to page — identical to the dense step
+        return decoder_decode_step(params, cfg, token, cache, cache_len)
+    h = params["embed"][token]                            # (B,1,D)
+    window = cfg.window if cfg.attention_kind == "sliding_window" else 0
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_k_dense:
+            fk = cfg.first_k_dense
+            stacked = (params["dense_layers"], cache["k"][:fk],
+                       cache["v"][:fk])
+
+            def dense_body(hh, xs):
+                lp, kc, vc = xs
+                a, kc, vc = _attn_decode_paged(
+                    cfg, lp["attn"], rms_norm(lp["ln1"], hh, cfg.norm_eps),
+                    kc, vc, cache_len, block_tables,
+                    window=window, page=page_size)
+                hh = hh + a
+                dcfg = cfg.with_overrides(d_ff=cfg.dense_d_ff or cfg.d_ff)
+                hh = hh + mlp(lp["mlp"], rms_norm(lp["ln2"], hh, cfg.norm_eps),
+                              dcfg.activation)
+                return hh, (kc, vc)
+            h, (kd, vd) = jax.lax.scan(dense_body, h, stacked)
+            moe_k, moe_v = cache["k"][fk:], cache["v"][fk:]
+        else:
+            fk = 0
+            moe_k, moe_v = cache["k"], cache["v"]
+
+        def body(hh, xs):
+            lp, kc, vc = xs
+            a, kc, vc = _attn_decode_paged(
+                cfg, lp["attn"], rms_norm(lp["ln1"], hh, cfg.norm_eps),
+                kc, vc, cache_len, block_tables,
+                window=window, page=page_size)
+            hh = hh + a
+            hn = rms_norm(lp["ln2"], hh, cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = moe_ffn(lp["moe"], hn, cfg, decode=True)
+            else:
+                f = mlp(lp["mlp"], hn, cfg.activation)
+            return hh + f, (kc, vc)
+
+        h, (km, vm) = jax.lax.scan(body, h, (params["layers"], moe_k, moe_v))
+        if fk:
+            new_cache["k"] = jnp.concatenate([kd, km], axis=0)
+            new_cache["v"] = jnp.concatenate([vd, vm], axis=0)
+        else:
+            new_cache["k"], new_cache["v"] = km, vm
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        L = cfg.n_layers
+        bounds = list(range(0, L, every))
+        new_states, new_ks, new_vs = [], [], []
+
+        def body(hh, xs):
+            lp, st = xs
+            out, new_st = mamba2_decode_step(
+                lp["ssm"], rms_norm(lp["ln"], hh, cfg.norm_eps), cfg, st)
+            return hh + out, new_st
+        for gi, start in enumerate(bounds):
+            end = min(start + every, L)
+            seg = jax.tree.map(lambda x: x[start:end], params["layers"])
+            st = jax.tree.map(lambda x: x[start:end], cache["ssm"])
+            h, ns = jax.lax.scan(body, h, (seg, st))
+            new_states.append(ns)
+            sh = params["shared_attn"]
+            a, kc, vc = _attn_decode_paged(
+                cfg, sh["attn"], rms_norm(sh["ln1"], h, cfg.norm_eps),
+                cache["k"][gi], cache["v"][gi], cache_len, block_tables,
+                window=window, page=page_size)
+            h = h + a
+            h = h + mlp(sh["mlp"], rms_norm(sh["ln2"], h, cfg.norm_eps),
+                        cfg.activation)
+            new_ks.append(kc)
+            new_vs.append(vc)
+        new_cache["ssm"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+        new_cache["k"] = jnp.stack(new_ks)
+        new_cache["v"] = jnp.stack(new_vs)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return logits, new_cache
+
+
+# -------------------------------------------------------- chunked prefill
+
+def decoder_prefill_chunk(params, cfg: ModelConfig, tokens, past_k, past_v,
+                          start):
+    """One Sarathi-style prefill chunk: run the chunk's tokens against the
+    already-cached prefix and return ONLY the chunk's new KV (the engine
+    scatters it into the paged pool; logits come later from the shared
+    decode path via the rewind-one-position trick).
+
+    tokens: (1, C) int32 chunk (C may be padded; pad rows' KV is simply
+    not scattered); past_k/past_v: (L, 1, S_past, KV, dh) gathered prefix
+    KV — S_past may exceed the true prefix, ``start`` masks the tail;
+    start: scalar int32, true prefix length = the chunk's first position.
+    Returns (k_chunk, v_chunk): (L, 1, C, KV, dh).
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(f"chunked prefill unsupported for {cfg.family}")
+    h = params["embed"][tokens]                           # (1, C, D)
+    b, c, _ = h.shape
+    s_past = past_k.shape[2]
+    positions = start + jnp.arange(c)
+    past_pos = jnp.arange(s_past)
+    # invalid prefix rows get position -1e9: masked by gqa_attention's
+    # kp >= 0 padding test, exactly like its internal end-padding
+    kv_positions = jnp.concatenate([
+        jnp.where(past_pos < start, past_pos, -(10 ** 9)), positions])
+    window = cfg.window if cfg.attention_kind == "sliding_window" else 0
+
+    def attn(acfg, p, hh, pk, pv):
+        q = linear(p["wq"], hh, p.get("bq")).reshape(
+            b, c, acfg.n_heads, acfg.head_dim)
+        k = linear(p["wk"], hh, p.get("bk")).reshape(
+            b, c, acfg.n_kv_heads, acfg.head_dim)
+        v = linear(p["wv"], hh, p.get("bv")).reshape(
+            b, c, acfg.n_kv_heads, acfg.head_dim)
+        q = apply_rope(q, positions, acfg.rope_theta)
+        k = apply_rope(k, positions, acfg.rope_theta)
+        kf = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        vf = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        o = gqa_attention(q, kf, vf, causal=True, window=window,
+                          positions=positions, kv_positions=kv_positions)
+        return linear(p["wo"], o.reshape(b, c, -1)), (k, v)
+
+    def block(acfg, lp, hh, pk, pv, *, with_moe):
+        hh = constrain_activations(hh)
+        a, kv = attn(acfg, lp["attn"], rms_norm(lp["ln1"], hh, acfg.norm_eps),
+                     pk, pv)
+        hh = hh + a
+        hn = rms_norm(lp["ln2"], hh, acfg.norm_eps)
+        if with_moe:
+            f, _ = moe_ffn(lp["moe"], hn, acfg)
+        else:
+            f = mlp(lp["mlp"], hn, acfg.activation)
+        return hh + f, kv
+
+    def scan_blocks(hh, stacked, pk_all, pv_all, body):
+        def step(carry, xs):
+            lp, pk, pv = xs
+            out, kv = body(carry, lp, pk, pv)
+            return out, kv
+        return jax.lax.scan(step, hh, (stacked, pk_all, pv_all))
+
+    if cfg.family == "moe" and cfg.first_k_dense:
+        fk = cfg.first_k_dense
+        dcfg = cfg.with_overrides(d_ff=cfg.dense_d_ff or cfg.d_ff)
+        h, (kd, vd) = scan_blocks(
+            h, params["dense_layers"], past_k[:fk], past_v[:fk],
+            lambda hh, lp, pk, pv: block(dcfg, lp, hh, pk, pv,
+                                         with_moe=False))
+        h, (km, vm) = scan_blocks(
+            h, params["layers"], past_k[fk:], past_v[fk:],
+            lambda hh, lp, pk, pv: block(cfg, lp, hh, pk, pv, with_moe=True))
+        k_new = jnp.concatenate([kd, km], axis=0)
+        v_new = jnp.concatenate([vd, vm], axis=0)
+    else:
+        h, (k_new, v_new) = scan_blocks(
+            h, params["layers"], past_k, past_v,
+            lambda hh, lp, pk, pv: block(cfg, lp, hh, pk, pv,
+                                         with_moe=cfg.family == "moe"))
+    return k_new, v_new

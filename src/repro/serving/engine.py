@@ -1,20 +1,38 @@
 """Continuous-batching serving engine driving a real JAX model.
 
 vLLM-style iteration loop, scheduled by repro.core.Scheduler (SageSched or
-any baseline policy):
+any baseline policy).  The execution layer is *memory-hybrid* (the
+paper's second axis): KV residency, capacity-forced eviction and swap IO
+are first-class, shared with the discrete-event simulator.
 
     submit() -> scheduler.admit (predict + cost + Gittins)
-    each step():
+    each step() builds an iteration plan:
         1. select the running set: scheduler priority order under the
-           KVCacheManager token budget (+ slot limit), with hysteresis
-           against priority thrashing (Sec. 3.3);
-        2. prefill newly admitted requests (slot-written caches);
-        3. one decode iteration over all running slots;
-        4. sample, detect <EOS>/max_tokens, feed completions back to the
+           KVCacheManager *block* budget (one authoritative accessor,
+           shared with can_admit) + slot limit, with hysteresis against
+           priority thrashing (Sec. 3.3);
+        2. preempt displaced requests — swap mode gathers their KV blocks
+           to the host pool (modeled cost: ServiceModel.swap_time over
+           block-aligned tokens, the SAME function the simulator
+           charges); recompute mode drops them;
+        3. admit newcomers: swapped requests are restored by scattering
+           their saved blocks back (NO re-prefill); fresh/recompute
+           requests prefill — Sarathi-style chunks mixed with the decode
+           batch under one token budget (``max_tokens_per_step``);
+        4. relieve capacity pressure: decode growth that found no free
+           block (grow() -> False) forces eviction, victims picked by
+           ``Scheduler.eviction_order`` — priority *plus* the memory
+           term (held KV ~ predicted swap cost);
+        5. one decode iteration over all decode-ready slots through the
+           paged pool (block-table indirection);
+        6. ONE vectorized sampling pass over all slots (argmax /
+           inverse-CDF categorical), completions fed back to the
            scheduler's history window.
 
-Preemption uses recompute mode (vLLM default): an evicted request frees
-its slot and re-prefills its full context when readmitted.
+KV memory is a paged pool: (L, n_pages, page, KV, dh) tensors shared by
+the batch, a per-slot block table mapping logical positions to physical
+pages (page 0 = scratch, where masked lanes write), and a host swap pool
+holding preempted requests' KV.  See docs/serving_engine.md.
 
 The engine is single-host (the real CpuDevice here; a TPU slice in
 production — the jitted step functions are the same ones the dry-run
@@ -23,6 +41,7 @@ lowers for the production mesh).
 
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 
@@ -32,7 +51,8 @@ import numpy as np
 
 from ..core.scheduler import Scheduler
 from ..models import Model
-from .kv_cache import KVCacheManager
+from ..simulator.service_model import ServiceModel
+from .kv_cache import SCRATCH_BLOCK, KVCacheManager
 from .metrics import EngineMetrics
 from .request import RequestState, ServeRequest
 
@@ -53,27 +73,71 @@ class ServingEngine:
     preemption_hysteresis: float = 0.5
     seed: int = 0
     params: dict | None = None
+    block_size: int = 16                   # KV page size, tokens
+    preemption_mode: str = "swap"          # "swap" | "recompute"
+    prefill_chunk: int | None = None       # tokens per chunk; None = atomic
+    max_tokens_per_step: int | None = None  # mixed prefill+decode budget
+    memory_weight: float = 0.5             # eviction memory term (0 = off)
+    swap_capacity_tokens: int | None = None
+    service_model: ServiceModel | None = None
 
     _requests: dict[str, ServeRequest] = field(default_factory=dict)
     _running: list[str] = field(default_factory=list)
 
     def __post_init__(self):
+        if self.preemption_mode not in ("swap", "recompute"):
+            raise ValueError(f"bad preemption_mode {self.preemption_mode!r}")
+        if not self.model.supports_paged:
+            raise ValueError(
+                f"{self.model.cfg.family} models are not servable through "
+                "the paged engine")
         if self.params is None:
             self.params = self.model.init(jax.random.PRNGKey(self.seed))
-        self.kv = KVCacheManager(self.n_slots, self.max_seq_len,
-                                 self.capacity_tokens)
+        self.kv = KVCacheManager(
+            self.n_slots, self.max_seq_len, self.capacity_tokens,
+            block_size=self.block_size,
+            swap_capacity_tokens=self.swap_capacity_tokens)
+        if self.service_model is None:
+            self.service_model = ServiceModel()
         self.metrics = EngineMetrics()
         self._rng = np.random.default_rng(self.seed)
-        self._cache = self.model.init_cache(self.n_slots, self.max_seq_len)
-        self._cache_len = np.zeros(self.n_slots, np.int64)
+        self._cache = self.model.init_paged_cache(
+            self.kv.pool_blocks, self.block_size, self.n_slots)
+        self._has_kv = "k" in self._cache
+        self._max_pages = -(-self.max_seq_len // self.block_size)
+        self._block_tables = np.full((self.n_slots, self._max_pages),
+                                     SCRATCH_BLOCK, np.int32)
+        # cache_len < 0 marks a slot that is not decode-ready (free, or
+        # still prefilling); the decode step masks it to 0
+        self._cache_len = np.full(self.n_slots, -1, np.int64)
         self._last_token = np.zeros(self.n_slots, np.int64)
         self._slot_rid: dict[int, str] = {}
+        self._needs_grow: set[str] = set()
+        page = self.block_size
         self._decode_fn = jax.jit(
-            lambda p, t, c, cl: self.model.decode_step(p, t, c, cl),
+            lambda p, t, c, cl, bt: self.model.decode_step_paged(
+                p, t, c, cl, bt, page_size=page),
             donate_argnums=(2,))
-        self._prefill_fn = jax.jit(
-            lambda p, b: self.model.prefill(p, b),
-            static_argnames=())
+        self._prefill_fn = jax.jit(lambda p, b: self.model.prefill(p, b))
+        self._chunk_fn = jax.jit(
+            lambda p, t, pk, pv, s: self.model.prefill_chunk(p, t, pk, pv, s))
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def scatter(pk, pv, ks, vs, idx):
+            fk = pk.reshape((pk.shape[0], -1) + pk.shape[3:])
+            fv = pv.reshape((pv.shape[0], -1) + pv.shape[3:])
+            fk = fk.at[:, idx].set(ks[:, 0].astype(fk.dtype))
+            fv = fv.at[:, idx].set(vs[:, 0].astype(fv.dtype))
+            return fk.reshape(pk.shape), fv.reshape(pv.shape)
+
+        @jax.jit
+        def gather(pk, pv, idx):
+            fk = pk.reshape((pk.shape[0], -1) + pk.shape[3:])
+            fv = pv.reshape((pv.shape[0], -1) + pv.shape[3:])
+            return fk[:, None, idx], fv[:, None, idx]
+
+        self._scatter_fn = scatter
+        self._gather_fn = gather
 
     # ------------------------------------------------------------ frontend
 
@@ -106,8 +170,7 @@ class ServingEngine:
     def abort(self, request_id: str) -> None:
         r = self._requests.get(request_id)
         if r and not r.done:
-            if r.state == RequestState.RUNNING:
-                self._release(r)
+            self._release(r)
             r.state = RequestState.ABORTED
             self.scheduler.on_abort(request_id)
 
@@ -115,25 +178,108 @@ class ServingEngine:
     def has_work(self) -> bool:
         return any(not r.done for r in self._requests.values())
 
-    # ------------------------------------------------------------- internal
+    # -------------------------------------------------------- slot plumbing
 
-    def _release(self, r: ServeRequest) -> None:
-        if self.kv.holds(r.request_id):
-            self.kv.release(r.request_id)
+    def _clear_slot(self, r: ServeRequest) -> None:
         if r.slot >= 0:
             self._slot_rid.pop(r.slot, None)
-            self._cache_len[r.slot] = 0
+            self._cache_len[r.slot] = -1
+            self._block_tables[r.slot] = SCRATCH_BLOCK
             r.slot = -1
         if r.request_id in self._running:
             self._running.remove(r.request_id)
+        self._needs_grow.discard(r.request_id)
+
+    def _release(self, r: ServeRequest) -> None:
+        """Drop every engine-side resource (completion / abort)."""
+        if self.kv.holds(r.request_id):
+            self.kv.release(r.request_id)
+        self.kv.drop_swapped(r.request_id)
+        r.prefill_pos = 0
+        self._clear_slot(r)
+
+    def _bind_slot(self, r: ServeRequest, slot: int) -> None:
+        r.slot = slot
+        self._slot_rid[slot] = r.request_id
+        row = np.full(self._max_pages, SCRATCH_BLOCK, np.int32)
+        blocks = self.kv.block_table(r.request_id)
+        row[:len(blocks)] = blocks
+        self._block_tables[slot] = row
+        if r.request_id not in self._running:
+            self._running.append(r.request_id)
+        r.state = RequestState.RUNNING
+
+    def _sync_block_table(self, r: ServeRequest) -> None:
+        """Refresh a slot's table row after ``grow`` appended blocks."""
+        blocks = self.kv.block_table(r.request_id)
+        self._block_tables[r.slot, :len(blocks)] = blocks
+
+    # ------------------------------------------------------------ swap plane
+
+    def _gather_payload(self, r: ServeRequest, blocks: list[int]) -> dict:
+        slot = r.slot
+        payload = {
+            "cache_len": int(self._cache_len[slot]),
+            "last_token": int(self._last_token[slot]),
+            "prefill_pos": r.prefill_pos,
+        }
+        if self._has_kv:
+            idx = jnp.asarray(blocks)
+            payload["k"] = np.asarray(self._cache["k"][:, idx])
+            payload["v"] = np.asarray(self._cache["v"][:, idx])
+        if "ssm" in self._cache:
+            payload["ssm"] = jax.tree.map(
+                lambda a: np.asarray(a[:, slot]), self._cache["ssm"])
+        return payload
+
+    def _restore_payload(self, r: ServeRequest, payload: dict) -> None:
+        slot = r.slot
+        blocks = self.kv.block_table(r.request_id)
+        if self._has_kv:
+            idx = jnp.asarray(blocks)
+            self._cache["k"] = self._cache["k"].at[:, idx].set(
+                jnp.asarray(payload["k"]))
+            self._cache["v"] = self._cache["v"].at[:, idx].set(
+                jnp.asarray(payload["v"]))
+        if "ssm" in self._cache:
+            self._cache["ssm"] = jax.tree.map(
+                lambda big, small: big.at[:, slot].set(jnp.asarray(small)),
+                self._cache["ssm"], payload["ssm"])
+        self._cache_len[slot] = payload["cache_len"]
+        self._last_token[slot] = payload["last_token"]
+        r.prefill_pos = payload["prefill_pos"]
+
+    def _preempt(self, r: ServeRequest) -> None:
+        rid = r.request_id
+        swapped = False
+        if (self.preemption_mode == "swap" and self.kv.holds(rid)
+                and self.kv.can_swap_out(rid)):
+            blocks = self.kv.block_table(rid)
+            payload = self._gather_payload(r, blocks)
+            tokens = self.kv.swap_out(rid, payload)
+            self.metrics.swap_outs += 1
+            self.metrics.swapped_out_tokens += tokens
+            self.metrics.modeled_swap_s += self.service_model.swap_time(
+                tokens, self.kv.block_size)
+            swapped = True
+        elif self.kv.holds(rid):
+            self.kv.release(rid)
+        if not swapped:
+            r.prefill_pos = 0      # recompute mode: replay the context
+        self._clear_slot(r)
+        r.state = RequestState.SWAPPED
+        r.n_preemptions += 1
+        self.metrics.preemptions += 1
+
+    # --------------------------------------------------------------- select
 
     def _select_running(self) -> list[str]:
-        """Scheduler-priority admission under slot + token budget, with
-        hysteresis protecting the current running set.  Ranking happens
-        inside the scheduler (one lexsort over BatchState under a batched
-        backend): preemptive policies scale running priorities by the
-        hysteresis factor, non-preemptive ones pin the running set ahead
-        of all waiters."""
+        """Scheduler-priority admission under the slot limit and the
+        KVCacheManager's *block* budget (``budget_blocks`` — the same
+        accessor ``can_admit`` uses, so engine selection and manager
+        admission can never drift).  Ranking happens inside the
+        scheduler: preemptive policies scale running priorities by the
+        hysteresis factor, non-preemptive ones pin the running set."""
         live = [rid for rid, r in self._requests.items() if not r.done]
         if not live:
             return []
@@ -145,38 +291,234 @@ class ServingEngine:
         else:
             order = self.scheduler.order(live, running=running,
                                          pin_running=True)
-        selected, used = [], 0
-        budget = self.kv.capacity_tokens * (1 - self.kv.watermark)
+        selected, used_blocks = [], 0
+        budget = self.kv.budget_blocks
         for rid in order:
             if len(selected) >= self.n_slots:
                 break
-            r = self._requests[rid]
-            need = r.context_len + 1
-            if used + need <= budget:
+            need = self.kv.blocks_for(
+                self._requests[rid].context_len + 1)
+            if used_blocks + need <= budget:
                 selected.append(rid)
-                used += need
+                used_blocks += need
+        if not selected:
+            # nothing fits (e.g. one giant prompt): force the top request
+            # so the engine cannot stall; if its context exceeds even the
+            # physical pool, step()'s admit guard rejects it outright
+            selected = [order[0]]
         return selected
 
-    def _write_slot(self, small_cache, slot: int) -> None:
-        """Write a prefill (B=1) cache into `slot` of the engine cache."""
-        def write(big, small):
-            if small.ndim >= 3 and big.shape[2] != small.shape[2]:
-                pad = [(0, 0)] * small.ndim
-                pad[2] = (0, big.shape[2] - small.shape[2])
-                small = jnp.pad(small, pad)
-            idx = [slice(None)] * big.ndim
-            idx[1] = slice(slot, slot + 1)
-            return big.at[tuple(idx)].set(small.astype(big.dtype))
-        self._cache = jax.tree.map(write, self._cache, small_cache)
+    # --------------------------------------------------------------- admit
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0:
-            return int(np.argmax(logits))
-        x = logits.astype(np.float64) / temperature
-        x -= x.max()
-        p = np.exp(x)
-        p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+    def _admit(self, r: ServeRequest) -> None:
+        rid = r.request_id
+        if self.preemption_mode == "swap" and self.kv.is_swapped(rid):
+            slot, payload = self.kv.swap_in(rid)
+            tokens = self.kv.tokens_of(rid)
+            r.slot = slot
+            self._bind_slot(r, slot)
+            self._restore_payload(r, payload)
+            r.n_swap_restores += 1
+            self.metrics.swap_ins += 1
+            self.metrics.swapped_in_tokens += tokens
+            self.metrics.modeled_swap_s += self.service_model.swap_time(
+                tokens, self.kv.block_size)
+            # a request preempted while awaiting a growth block comes
+            # back one block short of its next write position — re-grow
+            # (or re-mark the pressure) before it may decode again
+            if self._cache_len[slot] >= 0 \
+                    and self.kv.tokens_of(rid) <= self._cache_len[slot]:
+                if self.kv.grow(rid, 1):
+                    self._sync_block_table(r)
+                else:
+                    self.metrics.grow_failures += 1
+                    self._needs_grow.add(rid)
+            return
+        self.kv.drop_swapped(rid)
+        ctx_len = r.context_len      # replay prompt + outputs on recompute
+        slot = self.kv.allocate(rid, ctx_len)
+        self._bind_slot(r, slot)
+        r.prefill_pos = 0
+        self._cache_len[slot] = -1   # not decode-ready until prefilled
+
+    # -------------------------------------------------------------- prefill
+
+    def _phys_positions(self, r: ServeRequest, lo: int, hi: int,
+                        pad_to: int) -> np.ndarray:
+        """Flat pool token indices for logical positions [lo, hi), padded
+        to ``pad_to`` entries pointing at the scratch page."""
+        page = self.block_size
+        table = self._block_tables[r.slot]
+        pos = np.arange(lo, lo + pad_to)
+        phys = table[np.minimum(pos // page, self._max_pages - 1)] * page \
+            + pos % page
+        phys[pos >= hi] = SCRATCH_BLOCK * page
+        return phys.astype(np.int32)
+
+    def _finalize_prefill(self, r: ServeRequest, ctx: list[int]) -> None:
+        # the prefill may have run over a padded buffer, so its
+        # last-position logits are not trustworthy; rewind one position
+        # and let the shared decode path re-emit from the true last
+        # context token (the cache holds positions < len(ctx)).
+        # Identical for fresh prompts and recompute-mode readmissions —
+        # ctx already includes any previously generated tokens.
+        self._cache_len[r.slot] = len(ctx) - 1
+        self._last_token[r.slot] = ctx[-1]
+        self.metrics.prefills += 1
+        self.metrics.prefill_tokens += len(ctx)
+
+    def _prefill_chunk_step(self, r: ServeRequest, take: int) -> None:
+        """Advance one Sarathi chunk: run [prefill_pos, prefill_pos+take)
+        against the pool-resident prefix, scatter the chunk's KV."""
+        ctx = r.prompt_tokens + r.output_tokens
+        s0, s1 = r.prefill_pos, r.prefill_pos + take
+        cpad = _pad_len(take)
+        toks = np.zeros((1, cpad), np.int32)
+        toks[0, :take] = ctx[s0:s1]
+        if s0 == 0:
+            shp = self._cache["k"].shape
+            past_k = jnp.zeros((shp[0], 1, 0) + shp[3:], jnp.bfloat16)
+            past_v = past_k
+        else:
+            past_pad = _pad_len(s0)
+            idx = jnp.asarray(self._phys_positions(r, 0, s0, past_pad))
+            past_k, past_v = self._gather_fn(self._cache["k"],
+                                             self._cache["v"], idx)
+        k_c, v_c = self._chunk_fn(self.params, jnp.asarray(toks),
+                                  past_k, past_v, jnp.int32(s0))
+        out_idx = jnp.asarray(self._phys_positions(r, s0, s1, cpad))
+        self._cache["k"], self._cache["v"] = self._scatter_fn(
+            self._cache["k"], self._cache["v"], k_c, v_c, out_idx)
+        r.prefill_pos = s1
+        self.metrics.prefill_chunks += 1
+        if s1 >= len(ctx):
+            self._finalize_prefill(r, ctx)
+
+    def _prefill_atomic(self, r: ServeRequest) -> None:
+        """Whole-context prefill for families without chunk support
+        (SSM / hybrid recurrent state cannot replay a chunk).  Runs
+        unpadded so the recurrent state is not contaminated by pad
+        tokens; KV (hybrid) is scattered into the pool.
+
+        Known trade: unpadded means one XLA compile per distinct context
+        length (padded buckets would need a true-length mask threaded
+        through the recurrent scan to stay state-safe — ROADMAP item).
+        Correctness wins here; recurrent families are a side path of
+        this engine."""
+        ctx = r.prompt_tokens + r.output_tokens
+        toks = np.asarray([ctx], np.int32)
+        _, cache = self._prefill_fn(self.params,
+                                    {"tokens": jnp.asarray(toks)})
+        if self._has_kv:
+            phys = jnp.asarray(self._phys_positions(r, 0, len(ctx),
+                                                    len(ctx)))
+            self._cache["k"], self._cache["v"] = self._scatter_fn(
+                self._cache["k"], self._cache["v"], cache["k"], cache["v"],
+                phys)
+        if "ssm" in self._cache:
+            slot = r.slot
+            self._cache["ssm"] = jax.tree.map(
+                lambda big, small: big.at[:, slot].set(
+                    small[:, 0].astype(big.dtype)),
+                self._cache["ssm"], cache["ssm"])
+        r.prefill_pos = len(ctx)
+        self.metrics.prefill_chunks += 1
+        self._finalize_prefill(r, ctx)
+
+    def _run_prefills(self) -> None:
+        """Advance every prefilling slot under the step's token budget:
+        chunked prefill mixes with the decode batch — decode-ready slots
+        each consume one budget token, the remainder goes to chunks."""
+        prefilling = [rid for rid in self._running
+                      if self._cache_len[self._requests[rid].slot] < 0]
+        if not prefilling:
+            return
+        budget = None
+        if self.max_tokens_per_step is not None:
+            n_decoding = len(self._running) - len(prefilling)
+            budget = max(0, self.max_tokens_per_step - n_decoding)
+        for rid in prefilling:
+            r = self._requests[rid]
+            if not self.model.supports_chunked_prefill:
+                self._prefill_atomic(r)
+                continue
+            remaining = r.context_len - r.prefill_pos
+            cap = self.prefill_chunk or remaining
+            if budget is not None:
+                cap = min(cap, budget)
+            take = min(cap, remaining)
+            if take <= 0:
+                continue            # budget exhausted: resume next step
+            self._prefill_chunk_step(r, take)
+            if budget is not None:
+                budget -= take
+
+    # ------------------------------------------------------------- pressure
+
+    def _finish(self, r: ServeRequest) -> None:
+        r.state = RequestState.FINISHED
+        r.ttlt = time.monotonic() - r.arrival
+        self._release(r)
+        self.scheduler.on_complete(r.request_id, r.generated)
+        self.metrics.completed += 1
+
+    def _relieve_pressure(self) -> None:
+        """Decode growth that returned ``grow() == False`` is surfaced
+        here: force eviction until the growth fits, victims chosen by the
+        scheduler's memory-aware eviction order (priority + held-KV /
+        swap-cost term — the paper's hybrid true-service-cost).  Until a
+        request's growth fits, its slot sits out the decode batch (the
+        sampling loop skips ``_needs_grow`` members)."""
+        while self._needs_grow:
+            rid = next(iter(self._needs_grow))
+            r = self._requests.get(rid)
+            if r is None or r.done or not self.kv.holds(rid):
+                self._needs_grow.discard(rid)
+                continue
+            if self.kv.grow(rid, 1):
+                self._sync_block_table(r)
+                self._needs_grow.discard(rid)
+                continue
+            candidates = [x for x in self._running if self.kv.holds(x)]
+            if candidates == [rid]:
+                # sole resident request and still no room: its context has
+                # filled the physical pool — terminate by truncation, the
+                # same way the max_seq_len guard ends an endless request
+                self._finish(r)
+                continue
+            if not candidates:
+                break
+            victims = self.scheduler.eviction_order(
+                candidates,
+                held_tokens={x: self.kv.tokens_of(x) for x in candidates},
+                swap_cost=lambda t: self.service_model.swap_time(
+                    t, self.kv.block_size),
+                memory_weight=self.memory_weight)
+            self._preempt(self._requests[victims[0]])
+            self.metrics.forced_evictions += 1
+
+    # ------------------------------------------------------------- sampling
+
+    def _sample_batch(self, logits: np.ndarray, slots: list[int],
+                      temps: np.ndarray) -> np.ndarray:
+        """ONE vectorized sampling pass over all decode-ready slots:
+        argmax for greedy rows, inverse-CDF categorical for the rest."""
+        rows = logits[slots].astype(np.float64)
+        out = np.empty(len(slots), np.int64)
+        greedy = temps <= 0
+        if greedy.any():
+            out[greedy] = rows[greedy].argmax(axis=1)
+        stoch = ~greedy
+        if stoch.any():
+            x = rows[stoch] / temps[stoch, None]
+            x -= x.max(axis=1, keepdims=True)
+            p = np.exp(x)
+            p /= p.sum(axis=1, keepdims=True)
+            u = self._rng.random(p.shape[0])
+            cdf = np.cumsum(p, axis=1)
+            out[stoch] = np.minimum((cdf < u[:, None]).sum(axis=1),
+                                    p.shape[1] - 1)
+        return out
 
     # ----------------------------------------------------------------- step
 
@@ -185,72 +527,101 @@ class ServingEngine:
         now = time.monotonic()
         self.scheduler.set_now(now)
         selected = self._select_running()
+        sel = set(selected)
 
-        # preempt displaced requests (recompute mode: drop KV)
+        # preempt displaced requests (swap mode keeps their KV on host)
         for rid in list(self._running):
-            if rid not in selected:
-                r = self._requests[rid]
-                self._release(r)
-                r.state = RequestState.SWAPPED
-                r.n_preemptions += 1
-                self.metrics.preemptions += 1
+            if rid not in sel:
+                self._preempt(self._requests[rid])
 
-        # admit + prefill newcomers
+        # admit newcomers: swap-ins restore KV, others (re-)prefill
         for rid in selected:
             r = self._requests[rid]
-            if r.state == RequestState.RUNNING:
-                continue
-            ctx = r.prompt_tokens + r.output_tokens  # replay on readmission
-            slot = self.kv.allocate(rid, len(ctx))
-            r.slot = slot
-            self._slot_rid[slot] = rid
-            padded = _pad_len(len(ctx))
-            toks = np.zeros((1, padded), np.int32)
-            toks[0, :len(ctx)] = ctx
-            logits, cache = self._prefill_fn(self.params,
-                                             {"tokens": jnp.asarray(toks)})
-            self._write_slot(cache, slot)
-            # the prefill ran over a padded buffer, so its last-position
-            # logits are not trustworthy; rewind one position and let the
-            # shared decode path re-emit from the true last context token
-            # (the cache holds positions < len(ctx)).  Identical for fresh
-            # prompts and recompute-mode readmissions — ctx already
-            # includes any previously generated tokens.
-            self._cache_len[slot] = len(ctx) - 1
-            self._last_token[slot] = ctx[-1]
-            r.state = RequestState.RUNNING
-            if rid not in self._running:
-                self._running.append(rid)
-            self.metrics.prefills += 1
+            if r.state != RequestState.RUNNING:
+                try:
+                    self._admit(r)
+                except RuntimeError:
+                    if self.kv.blocks_for(r.context_len + 1) \
+                            > self.kv.n_blocks:
+                        # the context can NEVER fit the physical pool:
+                        # reject instead of livelocking in WAITING
+                        self._release(r)
+                        r.state = RequestState.ABORTED
+                        self.scheduler.on_abort(rid)
+                        continue
+                    # transient shortfall (e.g. forced-top guard racing
+                    # an external hog): leave the request queued
+                    continue
+
+        # capacity pressure from the previous decode's growth
+        self._relieve_pressure()
+
+        # chunked prefill, mixed with the decode batch under one budget
+        self._run_prefills()
 
         if not self._running:
             return 0
 
-        # one decode iteration over all slots (inactive slots masked)
+        # decode-ready slots.  _relieve_pressure drains _needs_grow every
+        # step before this point (a pressured resident request is always
+        # grown, evicted, or truncation-finished), so the filter below is
+        # a defensive invariant guard: if a future path ever leaves a
+        # pressured slot resident, sampling it would append a token whose
+        # KV write lands in scratch and is lost.
+        ready = [(slot, rid) for slot, rid in sorted(self._slot_rid.items())
+                 if self._cache_len[slot] >= 0
+                 and rid not in self._needs_grow]
+        if not ready:
+            return len(self._running)
+
+        # one decode iteration over all slots.  Slots that are mid-prefill
+        # (or free) are masked by pointing their table rows at the scratch
+        # page for this call: their lane's write lands in scratch instead
+        # of clobbering KV the chunked prefill already scattered.
         tokens = jnp.asarray(self._last_token[:, None], jnp.int32)
         cache_len = jnp.asarray(np.maximum(self._cache_len, 0), jnp.int32)
+        tables_np = self._block_tables
+        not_ready = self._cache_len < 0
+        if not_ready.any():
+            tables_np = tables_np.copy()
+            tables_np[not_ready] = SCRATCH_BLOCK
+        tables = jnp.asarray(tables_np)
         logits, self._cache = self._decode_fn(self.params, tokens,
-                                              self._cache, cache_len)
+                                              self._cache, cache_len,
+                                              tables)
         logits_np = np.asarray(logits, np.float32)
         self.metrics.decode_iterations += 1
 
-        for slot, rid in list(self._slot_rid.items()):
+        slots = [s for s, _ in ready]
+        rids = [rid for _, rid in ready]
+        temps = np.array([self._requests[rid].temperature for rid in rids])
+        toks = self._sample_batch(logits_np, slots, temps)
+
+        progressing, progressed = [], []
+        for slot, rid, tok in zip(slots, rids, toks):
             r = self._requests[rid]
-            tok = self._sample(logits_np[slot], r.temperature)
+            tok = int(tok)
             self._cache_len[slot] += 1
             self._last_token[slot] = tok
             r.output_tokens.append(tok)
             if np.isnan(r.ttft):
                 r.ttft = time.monotonic() - r.arrival
-            self.scheduler.on_progress(rid, r.generated)
-            self.kv.grow(rid, 1)
             if tok == r.eos_token or r.generated >= r.max_new_tokens \
                     or r.context_len >= self.max_seq_len - 1:
-                r.state = RequestState.FINISHED
-                r.ttlt = time.monotonic() - r.arrival
-                self._release(r)
-                self.scheduler.on_complete(rid, r.generated)
-                self.metrics.completed += 1
+                self._finish(r)
+                continue
+            progressing.append(rid)
+            progressed.append(r.generated)
+            # reserve the next token's block now; a False return is
+            # surfaced as capacity pressure and forces eviction at the
+            # next select (previously this return value was dropped and
+            # over-capacity growth went unaccounted)
+            if self.kv.grow(rid, 1):
+                self._sync_block_table(r)
+            else:
+                self.metrics.grow_failures += 1
+                self._needs_grow.add(rid)
+        self.scheduler.on_progress_many(progressing, progressed)
         return len(self._running)
 
     def run_until_done(self, max_steps: int = 100_000) -> None:

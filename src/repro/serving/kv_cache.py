@@ -1,80 +1,253 @@
-"""Slot-based KV cache manager with token-capacity accounting.
+"""Block-table KV cache manager: paged device pool + host swap pool.
 
-TPU adaptation of vLLM's paged block manager (DESIGN.md): rather than
-16-token CUDA pages with in-kernel block tables, each running request owns
-a *slot* in dense (L, slots, S_max, KV, dh) cache tensors — the layout the
-Pallas flash-decode kernel consumes — while admission is governed by a
-global *token* budget exactly like vLLM's block accounting (a request
-holds context_len tokens of budget; eviction frees them).  Swapped
-requests keep their tokens on the host conceptually; the engine replays
-their KV by re-prefilling (recompute preemption mode, vLLM's default).
+TPU adaptation of vLLM's paged block manager (DESIGN.md): KV memory is a
+pool of fixed-size *token blocks* (``block_size`` tokens each).  A running
+request owns
+
+  * a *slot* — its row in the engine's decode batch (tokens / cache_len /
+    block-table arrays), and
+  * a *block table* — the ordered list of physical blocks holding its KV;
+    logical token position ``p`` lives at block ``table[p // block_size]``,
+    offset ``p % block_size``.
+
+Physical block 0 is a reserved *scratch* block: inactive decode rows point
+their tables at it, so masked lanes write harmlessly instead of corrupting
+a neighbour.  Allocation is block-granular, which makes the accounting
+*fragmentation-aware*: a request holding ``t`` tokens pins
+``ceil(t / block_size)`` blocks, and admission is budgeted in blocks
+(``budget_blocks`` — one authoritative accessor shared by ``can_admit``
+and the engine's running-set selection), not in raw tokens.
+
+Preemption is swap-based: ``swap_out`` moves a request's blocks to a host
+pool (the engine attaches the gathered KV arrays as an opaque *payload*),
+``swap_in`` re-allocates device blocks and returns the payload so the
+engine can restore the cache without re-prefilling.  Recompute-mode
+preemption is plain ``release`` (drop the KV, replay the context later).
 """
 
 from __future__ import annotations
 
-__all__ = ["KVCacheManager"]
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = ["KVCacheManager", "BlockAllocation"]
+
+SCRATCH_BLOCK = 0
+
+
+@dataclass
+class BlockAllocation:
+    """Device-side state of one resident request."""
+
+    slot: int
+    tokens: int
+    blocks: list[int] = field(default_factory=list)
+
+
+@dataclass
+class _HostAllocation:
+    """Host-side state of one swapped-out request."""
+
+    tokens: int
+    n_blocks: int
+    payload: Any = None
 
 
 class KVCacheManager:
     def __init__(self, n_slots: int, max_seq_len: int,
                  capacity_tokens: int | None = None,
-                 watermark: float = 0.05):
+                 watermark: float = 0.05,
+                 block_size: int = 16,
+                 swap_capacity_tokens: int | None = None):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
+        self.block_size = block_size
         self.capacity_tokens = capacity_tokens or n_slots * max_seq_len
         self.watermark = watermark
-        self._free = list(range(n_slots))[::-1]
-        self._held: dict[str, tuple[int, int]] = {}  # rid -> (slot, tokens)
+        # device pool: blocks 1..n_blocks are allocatable, 0 is scratch
+        self.n_blocks = -(-self.capacity_tokens // block_size)
+        # host pool (swap destination), in blocks; default: 2x device
+        swap_cap = (2 * self.capacity_tokens if swap_capacity_tokens is None
+                    else swap_capacity_tokens)
+        self.swap_blocks = -(-swap_cap // block_size)
+        self._free_slots = list(range(n_slots))[::-1]
+        self._free_blocks = list(range(1, self.n_blocks + 1))[::-1]
+        self._held: dict[str, BlockAllocation] = {}
+        self._swapped: dict[str, _HostAllocation] = {}
+
+    # ---------------------------------------------------------------- sizing
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` (fragmentation-aware: the last
+        block is pinned whole even when partially filled)."""
+        return max(1, -(-int(tokens) // self.block_size))
+
+    @property
+    def pool_blocks(self) -> int:
+        """Physical pool size in blocks, *including* the scratch block —
+        the first dimension of the engine's paged KV tensors."""
+        return self.n_blocks + 1
+
+    @property
+    def budget_blocks(self) -> int:
+        """The authoritative admission budget, in blocks: total blocks
+        minus the watermark reserve kept free for decode growth.  Both
+        ``can_admit`` and the engine's running-set selection budget
+        against this single number (previously each hand-rolled its own
+        ``capacity * (1 - watermark)`` and they could drift)."""
+        return int(self.n_blocks * (1.0 - self.watermark))
+
+    @property
+    def admission_budget_tokens(self) -> int:
+        """``budget_blocks`` in token units (block-quantized)."""
+        return self.budget_blocks * self.block_size
 
     # ---------------------------------------------------------------- state
 
     @property
     def used_tokens(self) -> int:
-        return sum(t for _, t in self._held.values())
+        """Logical tokens held on device (excludes fragmentation)."""
+        return sum(a.tokens for a in self._held.values())
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(len(a.blocks) for a in self._held.values())
+
+    @property
+    def frag_tokens(self) -> int:
+        """Tokens pinned but unused inside partially-filled last blocks."""
+        return self.used_blocks * self.block_size - self.used_tokens
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
 
     @property
     def free_slots(self) -> int:
-        return len(self._free)
+        return len(self._free_slots)
+
+    @property
+    def swapped_tokens(self) -> int:
+        return sum(a.tokens for a in self._swapped.values())
+
+    @property
+    def swapped_blocks_used(self) -> int:
+        return sum(a.n_blocks for a in self._swapped.values())
 
     def tokens_of(self, request_id: str) -> int:
-        return self._held[request_id][1]
+        return self._held[request_id].tokens
 
     def slot_of(self, request_id: str) -> int:
-        return self._held[request_id][0]
+        return self._held[request_id].slot
+
+    def block_table(self, request_id: str) -> list[int]:
+        return list(self._held[request_id].blocks)
 
     def holds(self, request_id: str) -> bool:
         return request_id in self._held
 
+    def is_swapped(self, request_id: str) -> bool:
+        return request_id in self._swapped
+
+    def swapped_tokens_of(self, request_id: str) -> int:
+        return self._swapped[request_id].tokens
+
     # ------------------------------------------------------------ admission
 
     def can_admit(self, context_len: int, growth_reserve: int = 0) -> bool:
-        if not self._free:
+        if not self._free_slots:
             return False
-        budget = self.capacity_tokens * (1.0 - self.watermark)
-        return self.used_tokens + context_len + growth_reserve <= budget
+        need = self.blocks_for(context_len + growth_reserve)
+        if need > len(self._free_blocks):
+            return False
+        return self.used_blocks + need <= self.budget_blocks
 
     def allocate(self, request_id: str, context_len: int) -> int:
-        """Claim a slot + token budget; returns the slot index."""
+        """Claim a slot + the blocks for ``context_len`` tokens; returns
+        the slot index."""
         if request_id in self._held:
             raise KeyError(f"{request_id} already holds a slot")
-        if not self._free:
+        if not self._free_slots:
             raise RuntimeError("no free slots")
-        slot = self._free.pop()
-        self._held[request_id] = (slot, context_len)
+        need = self.blocks_for(context_len)
+        if need > len(self._free_blocks):
+            raise RuntimeError(
+                f"no free blocks: need {need}, have {len(self._free_blocks)}")
+        slot = self._free_slots.pop()
+        blocks = [self._free_blocks.pop() for _ in range(need)]
+        self._held[request_id] = BlockAllocation(slot, int(context_len),
+                                                 blocks)
         return slot
 
     def grow(self, request_id: str, new_tokens: int = 1) -> bool:
-        """Account for decode growth; False if capacity exceeded."""
-        slot, t = self._held[request_id]
-        if self.used_tokens + new_tokens > self.capacity_tokens:
+        """Account for decode growth, appending blocks when the request
+        crosses a block boundary.  Returns False — with NO partial
+        mutation — when the growth does not fit (``max_seq_len`` hit, or
+        the free pool is exhausted: capacity-forced eviction time)."""
+        a = self._held[request_id]
+        t_new = a.tokens + int(new_tokens)
+        if t_new > self.max_seq_len:
             return False
-        if t + new_tokens > self.max_seq_len:
+        need = self.blocks_for(t_new) - len(a.blocks)
+        if need > len(self._free_blocks):
             return False
-        self._held[request_id] = (slot, t + new_tokens)
+        for _ in range(need):
+            a.blocks.append(self._free_blocks.pop())
+        a.tokens = t_new
         return True
 
     def release(self, request_id: str) -> int:
-        """Free the slot + budget (completion, eviction, abort)."""
-        slot, _ = self._held.pop(request_id)
-        self._free.append(slot)
-        return slot
+        """Free the slot + blocks (completion, recompute-eviction, abort)."""
+        a = self._held.pop(request_id)
+        self._free_slots.append(a.slot)
+        self._free_blocks.extend(reversed(a.blocks))
+        return a.slot
+
+    # ----------------------------------------------------------------- swap
+
+    def can_swap_out(self, request_id: str) -> bool:
+        """Host pool headroom for this request's blocks."""
+        a = self._held[request_id]
+        return (self.swapped_blocks_used + len(a.blocks)
+                <= self.swap_blocks)
+
+    def swap_out(self, request_id: str, payload: Any = None) -> int:
+        """Move a resident request to the host pool.  ``payload`` is the
+        engine-gathered KV (opaque here); device blocks + slot are freed.
+        Returns the number of tokens swapped."""
+        if not self.can_swap_out(request_id):
+            raise RuntimeError(f"host swap pool full for {request_id}")
+        a = self._held.pop(request_id)
+        self._free_slots.append(a.slot)
+        self._free_blocks.extend(reversed(a.blocks))
+        self._swapped[request_id] = _HostAllocation(
+            tokens=a.tokens, n_blocks=len(a.blocks), payload=payload)
+        return a.tokens
+
+    def can_swap_in(self, request_id: str, growth_reserve: int = 0) -> bool:
+        return self.can_admit(self._swapped[request_id].tokens
+                              + growth_reserve)
+
+    def swap_in(self, request_id: str) -> tuple[int, Any]:
+        """Restore a swapped request onto the device: allocates a (new)
+        slot + blocks and returns ``(slot, payload)`` so the engine can
+        scatter the saved KV back — no re-prefill."""
+        host = self._swapped[request_id]
+        if not self._free_slots:
+            raise RuntimeError("no free slots")
+        need = self.blocks_for(host.tokens)
+        if need > len(self._free_blocks):
+            raise RuntimeError(
+                f"no free blocks: need {need}, have {len(self._free_blocks)}")
+        del self._swapped[request_id]
+        slot = self._free_slots.pop()
+        blocks = [self._free_blocks.pop() for _ in range(need)]
+        self._held[request_id] = BlockAllocation(slot, host.tokens, blocks)
+        return slot, host.payload
+
+    def drop_swapped(self, request_id: str) -> None:
+        """Discard a host-side allocation (abort, or fall back to
+        recompute when restoring is no longer worth it)."""
+        self._swapped.pop(request_id, None)

@@ -1,31 +1,73 @@
-"""Engine-level serving metrics (TTFT / TTLT / throughput accounting)."""
+"""Engine-level serving metrics (TTFT / ITL / throughput accounting).
+
+Swap IO is accounted in *modeled* seconds through the SAME
+``ServiceModel.swap_time`` / block-table math the simulator charges, so
+the real engine and the discrete-event simulator report preemption cost
+from one model (asserted in tests/test_serving_engine.py).
+"""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 __all__ = ["EngineMetrics"]
 
 
+def _pct(values: np.ndarray, q: float) -> float:
+    return float(np.quantile(values, q))
+
+
 @dataclass
 class EngineMetrics:
-    prefills: int = 0
+    prefills: int = 0            # completed prefill passes (swap-ins skip)
+    prefill_chunks: int = 0      # chunk forwards run (== prefills if atomic)
+    prefill_tokens: int = 0      # true (unpadded) prompt tokens prefilled
     decode_iterations: int = 0
     completed: int = 0
     preemptions: int = 0
+    forced_evictions: int = 0    # capacity-forced (decode-growth) evictions
+    grow_failures: int = 0       # KVCacheManager.grow() returned False
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swapped_out_tokens: int = 0
+    swapped_in_tokens: int = 0
+    modeled_swap_s: float = 0.0  # ServiceModel.swap_time over swap events
 
     def summary(self, requests) -> dict:
-        done = [r for r in requests if np.isfinite(getattr(r, "ttlt", np.nan))]
+        done = [r for r in requests
+                if np.isfinite(getattr(r, "ttlt", np.nan))]
         if not done:
             return {"completed": 0}
+        ttft = np.array([r.ttft for r in done])
+        ttlt = np.array([r.ttlt for r in done])
+        gen = np.array([r.generated for r in done], np.float64)
+        # inter-token latency: decode-phase spacing, excluding the first
+        # token (that is TTFT's job); single-token requests contribute 0
+        itl = (ttlt - ttft) / np.maximum(gen - 1, 1)
+        arrivals = np.array([r.arrival for r in done])
+        span = float((arrivals + ttlt).max() - arrivals.min())
         return {
             "completed": len(done),
-            "mean_ttft_s": float(np.mean([r.ttft for r in done])),
-            "mean_ttlt_s": float(np.mean([r.ttlt for r in done])),
-            "mean_output_len": float(np.mean([r.generated for r in done])),
+            "mean_ttft_s": float(ttft.mean()),
+            "p50_ttft_s": _pct(ttft, 0.50),
+            "p95_ttft_s": _pct(ttft, 0.95),
+            "p99_ttft_s": _pct(ttft, 0.99),
+            "mean_ttlt_s": float(ttlt.mean()),
+            "mean_itl_s": float(itl.mean()),
+            "p50_itl_s": _pct(itl, 0.50),
+            "p95_itl_s": _pct(itl, 0.95),
+            "p99_itl_s": _pct(itl, 0.99),
+            "output_tokens_per_s": float(gen.sum() / max(span, 1e-9)),
+            "mean_output_len": float(gen.mean()),
             "prefills": self.prefills,
+            "prefill_chunks": self.prefill_chunks,
             "decode_iterations": self.decode_iterations,
             "preemptions": self.preemptions,
+            "forced_evictions": self.forced_evictions,
+            "grow_failures": self.grow_failures,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "modeled_swap_s": self.modeled_swap_s,
         }

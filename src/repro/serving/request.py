@@ -29,9 +29,11 @@ class ServeRequest:
     state: RequestState = RequestState.WAITING
     output_tokens: list[int] = field(default_factory=list)
     slot: int = -1                    # engine batch slot while RUNNING
+    prefill_pos: int = 0              # context tokens whose KV is resident
     ttft: float = float("nan")
     ttlt: float = float("nan")
     n_preemptions: int = 0
+    n_swap_restores: int = 0          # readmissions that skipped re-prefill
 
     @property
     def input_len(self) -> int:

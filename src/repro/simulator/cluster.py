@@ -223,12 +223,14 @@ class CostAwareRouter(Router):
             heads = np.array([self.headroom(i)
                               for i in range(self.n_nodes)], np.float64)
             n = int(np.lexsort((-heads, self.outstanding))[0])
-        if self.kv[n].free_slots > 0:
+        kv = self.kv[n]
+        if kv.free_slots > 0 and kv.blocks_for(need_kv) <= kv.free_blocks:
             # mirror the token charge; under deep backlog (> max_batch
-            # queued requests) the slot pool is exhausted — the node is
-            # saturated anyway, so skip the mirror rather than crash
+            # queued requests) the slot pool — or, post block-table
+            # refactor, the physical block pool — is exhausted: the node
+            # is saturated anyway, so skip the mirror rather than crash
             # (on_complete's holds() check keeps release() symmetric)
-            self.kv[n].allocate(req.request_id, need_kv)
+            kv.allocate(req.request_id, need_kv)
         self.outstanding[n] += cost
         self._cost_of[req.request_id] = cost
         self._dist_of[req.request_id] = dist

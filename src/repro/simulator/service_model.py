@@ -129,10 +129,45 @@ class ServiceModel:
         attn = input_tokens * max(0, input_tokens - 512) * (s.flops_per_token / 8192)
         return s.fixed_overhead_s + (ffn + attn) / (s.mfu * s.peak_flops)
 
+    def prefill_chunk_time(self, chunk_tokens: int, past_tokens: int
+                           ) -> float:
+        """One Sarathi-style prefill chunk of ``chunk_tokens`` against an
+        already-cached prefix of ``past_tokens``: linear FFN over the
+        chunk + attention of the chunk's queries against the full prefix
+        (same 512-token knee as ``prefill_time``), plus one iteration's
+        fixed overhead — the per-chunk dispatch cost that makes chunking
+        a throughput/TTFT trade, not a free lunch."""
+        s = self.spec
+        ffn = chunk_tokens * s.flops_per_token
+        ctx = past_tokens + chunk_tokens
+        attn = chunk_tokens * max(0, ctx - 512) * (s.flops_per_token / 8192)
+        return s.fixed_overhead_s + (ffn + attn) / (s.mfu * s.peak_flops)
+
+    def prefill_time_chunked(self, input_tokens: int,
+                             chunk: int | None) -> float:
+        """Total prefill time when split into ``chunk``-token pieces
+        (``None`` or >= input_tokens: the atomic ``prefill_time``)."""
+        if not chunk or chunk >= input_tokens:
+            return self.prefill_time(input_tokens)
+        total, done = 0.0, 0
+        while done < input_tokens:
+            take = min(chunk, input_tokens - done)
+            total += self.prefill_chunk_time(take, done)
+            done += take
+        return total
+
     # --------------------------------------------------------------- swap
 
-    def swap_time(self, kv_tokens: int) -> float:
-        """Un-overlapped cost of swapping a request's KV in or out."""
+    def swap_time(self, kv_tokens: int, block_size: int = 1) -> float:
+        """Un-overlapped cost of swapping a request's KV in or out.
+
+        ``block_size > 1`` rounds the transfer up to whole KV blocks —
+        the block-table accounting of ``serving.kv_cache.KVCacheManager``.
+        Both the real engine and the simulator charge preemptions through
+        THIS function, so the two layers share one preemption cost model.
+        """
         s = self.spec
+        if block_size > 1:
+            kv_tokens = -(-int(kv_tokens) // block_size) * block_size
         raw = kv_tokens * s.kv_bytes_per_token / s.swap_bandwidth
         return raw * (1.0 - s.swap_overlap)

@@ -7,9 +7,18 @@ Faithful to the vLLM-style execution model the paper builds on:
   * paged KVCache with a hard token-capacity; admission requires prompt KV
     plus growth headroom; hitting the capacity forces eviction (Fig. 2(b));
   * preemption by swap with (mostly overlapped) IO cost, as the paper
-    assumes for Gittins refresh / FastServe demotion;
-  * prefill runs as its own iteration (Sarathi-style chunking is modeled
-    atomically — prefill admission is already iteration-granular).
+    assumes for Gittins refresh / FastServe demotion — charged through
+    the same block-aligned ``ServiceModel.swap_time`` the real engine's
+    KVCacheManager accounting uses (``block_size`` parameter);
+  * prefill runs as its own iteration, atomically by default; with
+    ``prefill_chunk`` set it advances Sarathi-style — at most that many
+    prompt tokens per round, mixed with single decode iterations of the
+    running batch (the execution model of ``ServingEngine``'s chunked
+    prefill plan);
+  * capacity-forced eviction picks victims via
+    ``Scheduler.eviction_order`` — priority plus an optional
+    ``memory_weight`` term (held KV ≈ predicted swap cost), shared with
+    the real engine.
 
 The simulator is *event-compressed*: between scheduling events (arrival,
 completion, priority-refresh boundary, capacity exhaustion) the active set
@@ -101,6 +110,7 @@ class _Live:
     metrics: RequestMetrics
     generated: int = 0
     prefilled: bool = False
+    prefill_done: int = 0       # prompt tokens prefilled (chunked mode)
     resident_kv: int = 0        # KV tokens currently in HBM
     swapped: bool = False       # preempted with KV moved to host
     pending_swap_in: int = 0    # KV tokens to restore before decoding
@@ -118,7 +128,10 @@ class NodeSimulator:
                  spec: NodeSpec | None = None,
                  admit_headroom: float = 0.95,
                  preemption_hysteresis: float = 0.5,
-                 node_id: int = -1):
+                 node_id: int = -1,
+                 prefill_chunk: int | None = None,
+                 block_size: int = 1,
+                 memory_weight: float = 0.0):
         self.scheduler = scheduler
         self.model = ServiceModel(spec or NodeSpec())
         self.admit_headroom = admit_headroom
@@ -127,6 +140,18 @@ class NodeSimulator:
         # the anti-thrashing counterpart of the paper's bucketized refresh
         # (Sec. 3.3: "thrashing risk ... may frequently reverse").
         self.preemption_hysteresis = preemption_hysteresis
+        # Sarathi-style chunked prefill: at most this many prompt tokens
+        # prefill per scheduling round, mixed with the decode batch
+        # (None = atomic, the seed behavior).
+        self.prefill_chunk = prefill_chunk
+        # KV block granularity: swap costs are charged on block-aligned
+        # token counts — the same ServiceModel.swap_time / block math the
+        # real engine's KVCacheManager accounting uses (1 = token-exact,
+        # the seed behavior).
+        self.block_size = block_size
+        # memory term in capacity-forced eviction (Scheduler.
+        # eviction_order): 0 = pure reversed priority (seed behavior).
+        self.memory_weight = memory_weight
         self.node_id = node_id
         self.now = 0.0
         self.n_iterations = 0
@@ -246,50 +271,88 @@ class NodeSimulator:
 
         iter_time = 0.0
 
-        # swap-in restored requests
+        # swap-in restored requests — charged through the SAME block-
+        # aligned ServiceModel.swap_time the real engine's accounting uses
         for rid in active:
             lv = live[rid]
             if lv.swapped:
-                iter_time += self.model.swap_time(lv.kv_if_resident)
+                iter_time += self.model.swap_time(lv.kv_if_resident,
+                                                  self.block_size)
                 lv.swapped = False
             if lv.prefilled:
                 lv.resident_kv = lv.kv_if_resident
 
-        # prefills (atomic, sequential — each produces the first token)
-        for rid in active:
-            lv = live[rid]
-            if not lv.prefilled:
-                iter_time += self.model.prefill_time(lv.req.input_len)
-                lv.prefilled = True
-                lv.generated = 1  # prefill emits the first output token
-                lv.resident_kv = lv.kv_if_resident
-                lv.metrics.ttft = self.now + iter_time - lv.req.arrival
+        # prefills: atomic (seed behavior), or Sarathi chunks under a
+        # per-round token budget, mixed with the decode batch below
+        if self.prefill_chunk:
+            budget = self.prefill_chunk
+            for rid in active:
+                lv = live[rid]
+                if lv.prefilled or budget <= 0:
+                    continue
+                take = min(budget, lv.req.input_len - lv.prefill_done)
+                iter_time += self.model.prefill_chunk_time(take,
+                                                           lv.prefill_done)
+                lv.prefill_done += take
+                budget -= take
                 self.n_iterations += 1
-                self.scheduler.on_progress(rid, lv.generated)
+                if lv.prefill_done >= lv.req.input_len:
+                    lv.prefilled = True
+                    lv.generated = 1  # prefill emits the first token
+                    lv.resident_kv = lv.kv_if_resident
+                    lv.metrics.ttft = self.now + iter_time - lv.req.arrival
+                    self.scheduler.on_progress(rid, lv.generated)
+        else:
+            for rid in active:
+                lv = live[rid]
+                if not lv.prefilled:
+                    iter_time += self.model.prefill_time(lv.req.input_len)
+                    lv.prefilled = True
+                    lv.prefill_done = lv.req.input_len
+                    lv.generated = 1  # prefill emits the first output token
+                    lv.resident_kv = lv.kv_if_resident
+                    lv.metrics.ttft = self.now + iter_time - lv.req.arrival
+                    self.n_iterations += 1
+                    self.scheduler.on_progress(rid, lv.generated)
 
-        # decode fast-forward: fixed active set until the next event
-        batch = [live[rid] for rid in active]
+        # decode fast-forward: fixed decode set until the next event.
+        # In chunked mode, requests still mid-prefill sit out the decode
+        # and cap the run at ONE mixed iteration (their next chunk is a
+        # scheduling event of its own).
+        decoding = [rid for rid in active if live[rid].prefilled]
+        mid_prefill = len(decoding) < len(active)
+        batch = [live[rid] for rid in decoding]
         remaining = [lv.req.true_output_len - lv.generated for lv in batch]
-        steps = max(0, min(remaining))
-        if self.scheduler.policy.refreshing:
-            to_refresh = self.scheduler.min_tokens_to_refresh(active)
+        steps = max(0, min(remaining)) if batch else 0
+        if mid_prefill:
+            steps = min(steps, 1)
+        if batch and self.scheduler.policy.refreshing:
+            to_refresh = self.scheduler.min_tokens_to_refresh(decoding)
             if to_refresh > 0 and np.isfinite(to_refresh):
                 steps = min(steps, int(to_refresh))
         B = len(batch)
         total_kv = sum(lv.resident_kv for lv in batch)
         if steps > 0:
-            # capacity exhausted: evict lowest-priority actives until at
-            # least one decode step of growth fits (vLLM-style eviction)
-            while (cap - total_kv) < len(active) and len(active) > 1:
-                victim = self.scheduler.order(active)[-1]
+            # capacity exhausted: force eviction until one decode step of
+            # growth fits.  Victims come from Scheduler.eviction_order —
+            # priority PLUS the memory term (held KV ~ predicted swap
+            # cost), the same ranking the real engine uses.
+            while (cap - total_kv) < len(decoding) and len(decoding) > 1:
+                victim = self.scheduler.eviction_order(
+                    decoding,
+                    held_tokens={r: live[r].resident_kv for r in decoding},
+                    swap_cost=lambda t: self.model.swap_time(
+                        t, self.block_size),
+                    memory_weight=self.memory_weight)[0]
                 lv = live[victim]
                 total_kv -= lv.resident_kv
                 lv.swapped = True
                 lv.resident_kv = 0
                 lv.metrics.n_preemptions += 1
                 self.n_evictions += 1
+                decoding = [r for r in decoding if r != victim]
                 active = [r for r in active if r != victim]
-            batch = [live[rid] for rid in active]
+            batch = [live[rid] for rid in decoding]
             B = len(batch)
             remaining = [lv.req.true_output_len - lv.generated
                          for lv in batch]
@@ -320,6 +383,8 @@ class NodeSimulator:
             for lv in batch:
                 lv.generated += steps
                 lv.resident_kv = lv.kv_if_resident
+        elif not batch:
+            pass  # pure-prefill round (chunked mode)
         elif all(lv.req.true_output_len <= lv.generated for lv in batch):
             pass  # all completing right after prefill
         elif iter_time == 0.0:
@@ -370,6 +435,8 @@ class NodeSimulator:
 
 
 def simulate(requests: list[SimRequest], scheduler: Scheduler,
-             spec: NodeSpec | None = None) -> SimResult:
-    """Convenience one-shot simulation."""
-    return NodeSimulator(scheduler, spec).run(requests)
+             spec: NodeSpec | None = None, **node_kwargs) -> SimResult:
+    """Convenience one-shot simulation.  ``node_kwargs`` pass through to
+    ``NodeSimulator`` (e.g. ``prefill_chunk``, ``block_size``,
+    ``memory_weight``)."""
+    return NodeSimulator(scheduler, spec, **node_kwargs).run(requests)

@@ -8,8 +8,10 @@ import numpy as np
 import pytest
 
 from repro.core import gittins_index_batch
-from repro.kernels.decode_attention.ops import decode_attention_op
-from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_paged_op)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_paged_reference, decode_attention_reference)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
 from repro.kernels.gittins.ops import (PAD_SUPPORT, gittins_attained_op,
@@ -63,6 +65,52 @@ def test_decode_attention_vs_oracle(B, S, H, KV, dh, window, blk, dtype):
     want = decode_attention_reference(q, k, v, cl, window=window)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,dh,page,P,n_pages,window", [
+    (2, 8, 2, 64, 16, 8, 32, 0),      # GQA
+    (3, 4, 1, 128, 32, 4, 16, 0),     # MQA
+    (2, 8, 8, 64, 16, 8, 32, 40),     # logical sliding window
+])
+def test_paged_decode_attention_vs_oracle(B, H, KV, dh, page, P, n_pages,
+                                          window, dtype):
+    """Block-table indirection kernel (scalar-prefetch index maps) vs the
+    gather-based oracle, non-contiguous physical pages."""
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, dh)), dtype)
+    kp = jnp.asarray(rng.normal(0, 1, (n_pages, page, KV, dh)), dtype)
+    vp = jnp.asarray(rng.normal(0, 1, (n_pages, page, KV, dh)), dtype)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages))[:B * P]
+                     .reshape(B, P), jnp.int32)
+    cl = jnp.asarray(rng.integers(1, P * page, (B,)), jnp.int32)
+    got = decode_attention_paged_op(q, kp, vp, bt, cl, window=window,
+                                    force_pallas=True)
+    want = decode_attention_paged_reference(q, kp, vp, bt, cl,
+                                            window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_matches_dense_on_gathered_cache():
+    """Paged oracle == dense oracle when the pool is gathered through the
+    block table — the indirection is a pure relayout."""
+    rng = np.random.default_rng(8)
+    B, H, KV, dh, page, P, n_pages = 2, 4, 2, 64, 16, 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, H, dh)), jnp.float32)
+    kp = rng.normal(0, 1, (n_pages, page, KV, dh)).astype(np.float32)
+    vp = rng.normal(0, 1, (n_pages, page, KV, dh)).astype(np.float32)
+    bt = rng.permutation(np.arange(1, n_pages))[:B * P].reshape(B, P)
+    cl = jnp.asarray(rng.integers(1, P * page, (B,)), jnp.int32)
+    tok = (bt * page)[:, :, None] + np.arange(page)
+    kd = kp.reshape(-1, KV, dh)[tok.reshape(B, -1)]
+    vd = vp.reshape(-1, KV, dh)[tok.reshape(B, -1)]
+    got = decode_attention_paged_reference(
+        q, jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(bt, jnp.int32), cl)
+    want = decode_attention_reference(q, jnp.asarray(kd), jnp.asarray(vd),
+                                      cl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [

@@ -35,6 +35,62 @@ def test_kv_manager_capacity_guard():
         kv.allocate("a", 1)
 
 
+def test_kv_block_tables_and_fragmentation():
+    kv = KVCacheManager(n_slots=2, max_seq_len=64, capacity_tokens=64,
+                        block_size=8)
+    assert kv.n_blocks == 8 and kv.pool_blocks == 9
+    kv.allocate("a", 10)                  # 2 blocks, 6 tokens frag
+    assert kv.used_blocks == 2 and kv.frag_tokens == 6
+    table = kv.block_table("a")
+    assert len(table) == 2 and 0 not in table     # scratch never handed out
+    # growth inside the last block allocates nothing new
+    assert kv.grow("a", 5) and kv.used_blocks == 2 and kv.frag_tokens == 1
+    # crossing the boundary appends exactly one block
+    assert kv.grow("a", 2) and kv.used_blocks == 3
+    assert kv.block_table("a")[:2] == table
+    # block-denominated admission budget is the single source of truth
+    assert kv.budget_blocks == int(8 * 0.95)
+    assert kv.admission_budget_tokens == kv.budget_blocks * 8
+    assert not kv.can_admit(48)           # needs 6 blocks; 3 + 6 > budget 7
+    assert kv.can_admit(30)               # needs 4 blocks; 3 + 4 <= 7
+
+
+def test_kv_grow_failure_no_partial_mutation():
+    kv = KVCacheManager(n_slots=2, max_seq_len=64, capacity_tokens=16,
+                        block_size=8)
+    kv.allocate("a", 16)                  # both blocks
+    kv2 = KVCacheManager(n_slots=2, max_seq_len=8, capacity_tokens=64,
+                         block_size=8)
+    kv2.allocate("b", 8)
+    for mgr, rid in ((kv, "a"), (kv2, "b")):
+        before = (mgr.tokens_of(rid), list(mgr.block_table(rid)),
+                  mgr.free_blocks)
+        assert not mgr.grow(rid, 1)
+        assert (mgr.tokens_of(rid), list(mgr.block_table(rid)),
+                mgr.free_blocks) == before
+
+
+def test_kv_swap_roundtrip():
+    kv = KVCacheManager(n_slots=2, max_seq_len=64, capacity_tokens=64,
+                        block_size=8)
+    slot_a = kv.allocate("a", 20)         # 3 blocks
+    kv.allocate("b", 20)
+    payload = {"marker": 42}
+    assert kv.can_swap_out("a")
+    assert kv.swap_out("a", payload) == 20
+    assert not kv.holds("a") and kv.is_swapped("a")
+    assert kv.swapped_tokens == 20 and kv.swapped_blocks_used == 3
+    assert kv.free_slots == 1 and kv.used_blocks == 3   # b's blocks only
+    slot_a2, restored = kv.swap_in("a")
+    assert restored is payload
+    assert kv.holds("a") and not kv.is_swapped("a")
+    assert kv.tokens_of("a") == 20 and len(kv.block_table("a")) == 3
+    assert slot_a2 in (slot_a, 1 - slot_a)  # any free slot is fine
+    kv.swap_out("b")
+    kv.drop_swapped("b")
+    assert kv.swapped_tokens == 0
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from("abcdefgh"),
                           st.integers(1, 30)), max_size=40))
