@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..bucketing import pow2_bucket
 from .kernel import decode_attention_kernel, decode_attention_paged_kernel
 from .ref import (decode_attention_paged_reference,
                   decode_attention_reference)
@@ -43,11 +44,21 @@ def decode_attention_paged_op(q, k_pool, v_pool, block_tables, cache_len, *,
                               window: int = 0, force_pallas: bool = False):
     """Paged flash-decode: q (B, H, dh); pools (n_pages, page, KV, dh);
     block_tables (B, P) int32; cache_len (B,).  The kernel's KV grid step
-    is the page itself — block tables replace any padding logic."""
+    is the page itself — block tables replace any padding logic.
+
+    The logical-page axis is padded to a pow2 bucket before the kernel
+    call: the padded table entries point at physical page 0 (the serving
+    engine's scratch page) and sit past every row's ``cache_len``, so
+    they are masked out — the kernel's grid/index-map signature stays on
+    the bounded bucket ladder no matter how callers size their tables."""
     native = jax.default_backend() == "tpu"
     if not native and not force_pallas:
         return decode_attention_paged_reference(
             q, k_pool, v_pool, block_tables, cache_len, window=window)
+    p_max = block_tables.shape[1]
+    pb = pow2_bucket(p_max)
+    if pb != p_max:
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pb - p_max)))
     return decode_attention_paged_kernel(
         q, k_pool, v_pool, block_tables.astype(jnp.int32),
         cache_len.astype(jnp.int32), window=window, interpret=not native)

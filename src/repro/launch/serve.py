@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--n-requests", type=int, default=12)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-seq-len", type=int, default=192)
+    ap.add_argument("--step-mode", default="fused",
+                    choices=("fused", "orchestrated"),
+                    help="fused = one jitted device call per decode "
+                         "(multi-)step; orchestrated = host-side loop")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode tokens per host round-trip (fused mode)")
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) config — TPU slice required")
     args = ap.parse_args()
@@ -40,7 +46,8 @@ def main():
     engine = ServingEngine(
         model=build_model(cfg),
         scheduler=Scheduler(policy=make_policy(args.policy)),
-        n_slots=args.n_slots, max_seq_len=args.max_seq_len, seed=0)
+        n_slots=args.n_slots, max_seq_len=args.max_seq_len, seed=0,
+        step_mode=args.step_mode, decode_steps=args.decode_steps)
 
     rng = np.random.default_rng(0)
     t0 = time.monotonic()

@@ -107,6 +107,12 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
     (positions in [cache_len - window, cache_len)) — paged caches keep
     every block resident instead of ring-wrapping.
     Returns (B, 1, H, dh).
+
+    Bucket-stable by construction: P may be padded to a pow2 bucket with
+    scratch-page rows (they sit past ``cache_len`` and mask to exact
+    zeros under the unnormalized-exp softmax), and batch rows are
+    independent lanes — so the fused engine step can gather active slots
+    into pow2 batch buckets without perturbing any real lane's logits.
     """
     b = q.shape[0]
     n_pages, page, kvh, dh = k_pool.shape

@@ -59,7 +59,8 @@ class Model:
         fe = batch.get("patches") if cfg.family == "vlm" else None
         return decoder_forward(params, cfg, batch["tokens"],
                                frontend_embeds=fe,
-                               collect_cache=collect_cache, remat=remat)
+                               collect_cache=collect_cache, remat=remat,
+                               lengths=batch.get("lengths"))
 
     def loss_fn(self, params, batch, remat=None):
         """Scalar LM loss (+ router aux)."""
@@ -75,7 +76,14 @@ class Model:
     # ------------------------------------------------------------ serving
 
     def prefill(self, params, batch):
-        """Returns (last-position logits (B,V), cache dict)."""
+        """Returns (last-position logits (B,V), cache dict).
+
+        ``batch`` may carry ``"lengths"`` (B,) int32 true row lengths for
+        end-padded token buffers: recurrent families mask the scan so the
+        returned state is bit-identical to an unpadded prefill (the engine
+        pads to pow2 buckets for a bounded compile set).  Note the
+        last-position logits are then pad-position logits — the serving
+        engine never uses them (rewind-one-position trick)."""
         logits, cache, _ = self.forward(params, batch, collect_cache=True,
                                         remat=False)
         return logits[:, -1, :], cache

@@ -52,15 +52,30 @@ def ssm_state_shape(cfg, batch: int):
     }
 
 
-def _causal_conv(x, w, tail=None):
-    """Depthwise causal conv1d. x: (B,S,DI); w: (K,DI); tail: (B,K-1,DI)."""
+def _causal_conv(x, w, tail=None, lengths=None):
+    """Depthwise causal conv1d. x: (B,S,DI); w: (K,DI); tail: (B,K-1,DI).
+
+    ``lengths`` (B,) marks each row's true length when ``x`` is padded at
+    the end: the returned tail is then the last K-1 *valid* inputs
+    (positions [length-K+1, length)), not the padded stream's physical
+    tail, so a later decode step resumes from the same conv state the
+    unpadded scan would have left."""
     k = w.shape[0]
     if tail is None:
         tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)    # (B,S+K-1,DI)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
               for i in range(k))
-    new_tail = xp[:, -(k - 1):, :] if k > 1 else tail
+    if k <= 1:
+        new_tail = tail
+    elif lengths is None:
+        new_tail = xp[:, -(k - 1):, :]
+    else:
+        # xp index i holds x position i - (k-1): the last K-1 valid
+        # inputs sit at xp[length .. length+K-2]
+        new_tail = jax.vmap(
+            lambda row, n: jax.lax.dynamic_slice_in_dim(row, n, k - 1))(
+            xp, lengths)
     return out, new_tail
 
 
@@ -140,22 +155,35 @@ def ssd_decode_step(state, x, dt, a_decay, Bvec, Cvec):
     return y.astype(x.dtype), new_state
 
 
-def mamba2_block(params, u, cfg, state=None):
+def mamba2_block(params, u, cfg, state=None, lengths=None):
     """Full Mamba2 block over a sequence. u: (B,S,D).
-    Returns (out (B,S,D), new_state dict)."""
+    Returns (out (B,S,D), new_state dict).
+
+    ``lengths`` (B,) int32 enables *true-length masking* for end-padded
+    inputs: pad positions get dt = 0, hence per-step decay
+    a = exp(-exp(A_log) * 0) = 1 exactly and input contribution
+    x * dt = 0 — the recurrence carries the state through pads untouched,
+    so the final state (and every valid position's output, the scan being
+    causal) is bit-identical to running the unpadded sequence.  This is
+    what lets the serving engine pad SSM/hybrid prefills to pow2 buckets
+    instead of compiling once per distinct context length."""
     b, s, d = u.shape
     h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     xin = constrain_inner(
         jnp.einsum("bsd,df->bsf", u, params["in_proj_x"]))     # (B,S,DI)
     z = constrain_inner(jnp.einsum("bsd,df->bsf", u, params["in_proj_z"]))
     conv_tail = None if state is None else state["conv"]
-    xc, new_tail = _causal_conv(xin, params["conv_w"], conv_tail)
+    xc, new_tail = _causal_conv(xin, params["conv_w"], conv_tail,
+                                lengths=lengths)
     xc = jax.nn.silu(xc)
     bc = jnp.einsum("bsd,dn->bsn", u, params["bc_proj"])       # (B,S,2N)
     Bmat, Cmat = bc[..., :n], bc[..., n:]
     dt = jax.nn.softplus(
         jnp.einsum("bsd,dh->bsh", u, params["dt_proj"]).astype(jnp.float32)
         + params["dt_bias"])
+    if lengths is not None:
+        valid = jnp.arange(s)[None, :] < lengths[:, None]      # (B,S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     a_decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B,S,H)
     x_heads = xc.reshape(b, s, h, p)
     init = None if state is None else state["ssd"]

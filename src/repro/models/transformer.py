@@ -99,10 +99,10 @@ def _dense_block_seq(cfg, p, h, positions, *, window: int, with_moe: bool):
     return h + ffn_out, kv, aux
 
 
-def _ssm_block_seq(cfg, p, h, state=None):
+def _ssm_block_seq(cfg, p, h, state=None, lengths=None):
     h = constrain_activations(h)
     out, new_state = mamba2_block(p["ssm"], rms_norm(p["ln"], h, cfg.norm_eps),
-                                  cfg, state)
+                                  cfg, state, lengths=lengths)
     return h + out, new_state
 
 
@@ -110,11 +110,16 @@ def _ssm_block_seq(cfg, p, h, state=None):
 
 def decoder_forward(params, cfg: ModelConfig, tokens, positions=None,
                     frontend_embeds=None, *, collect_cache: bool = False,
-                    remat: bool | None = None):
+                    remat: bool | None = None, lengths=None):
     """Full-sequence forward (training and prefill).
 
     tokens: (B, S_text) int32.  frontend_embeds: (B, P, D) optional patch /
     audio-frame embeddings prepended to the text sequence (VLM stub).
+    lengths: (B,) int32 true row lengths for end-padded batches — threaded
+    into the SSM recurrence (true-length mask, bit-identical to unpadded)
+    so recurrent families can prefill over pow2-bucketed padding; the
+    attention families are causal, so end-pads never reach valid
+    positions and need no mask.
     Returns (logits (B,S,V), cache_or_None, aux_loss).
     """
     remat = cfg.remat if remat is None else remat
@@ -165,7 +170,7 @@ def decoder_forward(params, cfg: ModelConfig, tokens, positions=None,
 
     elif cfg.family == "ssm":
         def body(carry, lp):
-            hh = _ssm_block_seq(cfg, lp, carry)
+            hh = _ssm_block_seq(cfg, lp, carry, lengths=lengths)
             return hh[0], hh[1]
         fn = jax.checkpoint(body) if remat else body
         h, states = jax.lax.scan(fn, h, params["layers"])
@@ -180,7 +185,7 @@ def decoder_forward(params, cfg: ModelConfig, tokens, positions=None,
         mamba_states = []
 
         def body(carry, lp):
-            hh = _ssm_block_seq(cfg, lp, carry)
+            hh = _ssm_block_seq(cfg, lp, carry, lengths=lengths)
             return hh[0], hh[1]
         fn = jax.checkpoint(body) if remat else body
         for gi, start in enumerate(bounds):

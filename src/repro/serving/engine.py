@@ -29,6 +29,16 @@ are first-class, shared with the discrete-event simulator.
            inverse-CDF categorical), completions fed back to the
            scheduler's history window.
 
+In the default ``step_mode="fused"``, stages 5-6 plus per-lane
+EOS/length bookkeeping are ONE jitted, buffer-donated device call: a
+``lax.fori_loop`` decodes up to ``decode_steps`` tokens per host
+round-trip with on-device sampling, and the host gets back a single
+(tokens, emitted, finished) transfer.  Traced shapes ride pow2 bucket
+ladders (active lanes, table width, prefill padding) so batch churn
+never grows the compile set past ``max_fused_compiles()``.
+``step_mode="orchestrated"`` keeps the per-step host loop as the parity
+oracle and benchmark baseline.
+
 KV memory is a paged pool: (L, n_pages, page, KV, dh) tensors shared by
 the batch, a per-slot block table mapping logical positions to physical
 pages (page 0 = scratch, where masked lanes write), and a host swap pool
@@ -43,6 +53,7 @@ from __future__ import annotations
 
 import functools
 import time
+import zlib
 from dataclasses import dataclass, field
 
 import jax
@@ -50,6 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.scheduler import Scheduler
+from ..kernels.bucketing import ladder_size as _ladder_size
+from ..kernels.bucketing import pow2_bucket as _pow2_bucket
 from ..models import Model
 from ..simulator.service_model import ServiceModel
 from .kv_cache import SCRATCH_BLOCK, KVCacheManager
@@ -60,7 +73,15 @@ __all__ = ["ServingEngine"]
 
 
 def _pad_len(n: int, quantum: int = 64) -> int:
-    return max(quantum, ((n + quantum - 1) // quantum) * quantum)
+    """pow2 bucket with a floor — prefill chunk/prefix padding ladder."""
+    return _pow2_bucket(n, floor=quantum)
+
+
+def _rid_seed(request_id: str) -> int:
+    """Stable per-request RNG seed: sampling draws depend on (request,
+    position), never on slot assignment or preemption history, so swap
+    and recompute schedules sample identical streams."""
+    return zlib.crc32(request_id.encode())
 
 
 @dataclass
@@ -80,6 +101,8 @@ class ServingEngine:
     memory_weight: float = 0.5             # eviction memory term (0 = off)
     swap_capacity_tokens: int | None = None
     service_model: ServiceModel | None = None
+    step_mode: str = "fused"               # "fused" | "orchestrated"
+    decode_steps: int = 1                  # decode tokens per host round-trip
 
     _requests: dict[str, ServeRequest] = field(default_factory=dict)
     _running: list[str] = field(default_factory=list)
@@ -87,6 +110,10 @@ class ServingEngine:
     def __post_init__(self):
         if self.preemption_mode not in ("swap", "recompute"):
             raise ValueError(f"bad preemption_mode {self.preemption_mode!r}")
+        if self.step_mode not in ("fused", "orchestrated"):
+            raise ValueError(f"bad step_mode {self.step_mode!r}")
+        if self.decode_steps < 1:
+            raise ValueError("decode_steps must be >= 1")
         if not self.model.supports_paged:
             raise ValueError(
                 f"{self.model.cfg.family} models are not servable through "
@@ -138,6 +165,78 @@ class ServingEngine:
 
         self._scatter_fn = scatter
         self._gather_fn = gather
+
+        # ------------------------------------------------ fused decode step
+        # One jitted, buffer-donated device function per (B bucket, P
+        # bucket, n_steps): paged attention over all layers, sampling,
+        # KV/state writes, and per-lane length/EOS/finished bookkeeping
+        # run on-device inside a lax.fori_loop; the host gets back ONE
+        # small (tokens, emitted, finished) transfer per call.  Recurrent
+        # families carry per-slot state inside the cache, so their lanes
+        # are slot-positional (B = n_slots, a single batch bucket); the
+        # attention families bucket active lanes to the pow2 ladder.
+        self._slot_state = "ssm" in self._cache
+        model = self.model
+        base_key = jax.random.PRNGKey(self.seed)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("n_steps", "all_greedy"),
+                           donate_argnums=(1,))
+        def fused_steps(params, cache, last, cl, tables, budgets, caps,
+                        eos, temps, seeds, counters, *, n_steps: int,
+                        all_greedy: bool):
+            nb = last.shape[0]
+            greedy = temps <= 0.0
+            safe_t = jnp.where(greedy, 1.0, temps)
+
+            def body(i, st):
+                cache, last, cl, emitted, fin, buf = st
+                act = (~fin) & (i < budgets)
+                # inactive lanes (finished mid-loop, budget-paused, pad)
+                # ride the scratch page: their KV write lands harmlessly
+                bt = jnp.where(act[:, None], tables, SCRATCH_BLOCK)
+                old_ssm = cache.get("ssm")
+                logits, cache = model.decode_step_paged(
+                    params, last[:, None], cache, cl, bt, page_size=page)
+                if old_ssm is not None:
+                    # recurrent state has no scratch page — freeze the
+                    # rows of inactive lanes explicitly
+                    cache = dict(cache)
+                    cache["ssm"] = jax.tree.map(
+                        lambda new, old: jnp.where(
+                            act.reshape((1, nb) + (1,) * (new.ndim - 2)),
+                            new, old),
+                        cache["ssm"], old_ssm)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if not all_greedy:
+                    # categorical draws are keyed by (request seed,
+                    # position) — invariant to slot and preemption
+                    # history.  Skipped entirely (statically) when every
+                    # lane is greedy: at production vocab sizes the
+                    # per-lane Gumbel draw is the single largest cost in
+                    # the step after the forward itself.
+                    keys = jax.vmap(
+                        lambda s, c: jax.random.fold_in(
+                            jax.random.fold_in(base_key, s), c)
+                    )(seeds, (counters + i).astype(jnp.uint32))
+                    st_tok = jax.vmap(jax.random.categorical)(
+                        keys, logits.astype(jnp.float32) / safe_t[:, None])
+                    tok = jnp.where(greedy, tok, st_tok.astype(jnp.int32))
+                emitted = emitted + act.astype(jnp.int32)
+                fin = fin | (act & ((tok == eos) | (emitted >= caps)))
+                last = jnp.where(act, tok, last)
+                cl = cl + act.astype(cl.dtype)
+                buf = buf.at[:, i].set(jnp.where(act, tok, -1))
+                return (cache, last, cl, emitted, fin, buf)
+
+            st0 = (cache, last, cl, jnp.zeros((nb,), jnp.int32),
+                   jnp.zeros((nb,), bool), jnp.full((nb, n_steps), -1,
+                                                    jnp.int32))
+            cache, last, cl, emitted, fin, buf = jax.lax.fori_loop(
+                0, n_steps, body, st0)
+            return buf, emitted, fin, cache
+
+        self._fused_fn = fused_steps
 
     # ------------------------------------------------------------ frontend
 
@@ -396,22 +495,23 @@ class ServingEngine:
 
     def _prefill_atomic(self, r: ServeRequest) -> None:
         """Whole-context prefill for families without chunk support
-        (SSM / hybrid recurrent state cannot replay a chunk).  Runs
-        unpadded so the recurrent state is not contaminated by pad
-        tokens; KV (hybrid) is scattered into the pool.
-
-        Known trade: unpadded means one XLA compile per distinct context
-        length (padded buckets would need a true-length mask threaded
-        through the recurrent scan to stay state-safe — ROADMAP item).
-        Correctness wins here; recurrent families are a side path of
-        this engine."""
+        (SSM / hybrid recurrent state cannot replay a chunk), padded to a
+        pow2 bucket.  The true length rides along as a mask threaded
+        through the recurrent scan (``mamba2_block`` forces dt = 0 at pad
+        positions, so decay is exactly 1 and the state is bit-identical
+        to an unpadded run) — one XLA compile per *bucket*, not per
+        distinct context length.  KV (hybrid) is scattered into the pool
+        for valid positions only; pad positions land in scratch."""
         ctx = r.prompt_tokens + r.output_tokens
-        toks = np.asarray([ctx], np.int32)
-        _, cache = self._prefill_fn(self.params,
-                                    {"tokens": jnp.asarray(toks)})
+        n = len(ctx)
+        spad = _pad_len(n, quantum=32)
+        toks = np.zeros((1, spad), np.int32)
+        toks[0, :n] = ctx
+        _, cache = self._prefill_fn(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray([n], jnp.int32)})
         if self._has_kv:
-            phys = jnp.asarray(self._phys_positions(r, 0, len(ctx),
-                                                    len(ctx)))
+            phys = jnp.asarray(self._phys_positions(r, 0, n, spad))
             self._cache["k"], self._cache["v"] = self._scatter_fn(
                 self._cache["k"], self._cache["v"], cache["k"], cache["v"],
                 phys)
@@ -574,6 +674,17 @@ class ServingEngine:
         if not ready:
             return len(self._running)
 
+        if self.step_mode == "fused":
+            self._decode_fused(ready)
+        else:
+            self._decode_orchestrated(ready)
+        return len(self._running)
+
+    def _decode_orchestrated(self, ready: list[tuple[int, str]]) -> None:
+        """Python-orchestrated decode iteration (the pre-fused path, kept
+        as the fused step's parity oracle and benchmark baseline): one
+        full-width device forward, logits shipped to the host, sampling
+        and per-slot bookkeeping in numpy."""
         # one decode iteration over all slots.  Slots that are mid-prefill
         # (or free) are masked by pointing their table rows at the scratch
         # page for this call: their lane's write lands in scratch instead
@@ -604,6 +715,7 @@ class ServingEngine:
             self._cache_len[slot] += 1
             self._last_token[slot] = tok
             r.output_tokens.append(tok)
+            self.metrics.decode_tokens += 1
             if np.isnan(r.ttft):
                 r.ttft = time.monotonic() - r.arrival
             if tok == r.eos_token or r.generated >= r.max_new_tokens \
@@ -622,7 +734,135 @@ class ServingEngine:
                 self.metrics.grow_failures += 1
                 self._needs_grow.add(rid)
         self.scheduler.on_progress_many(progressing, progressed)
-        return len(self._running)
+
+    def _decode_fused(self, ready: list[tuple[int, str]]) -> None:
+        """Fused decode: ONE jitted, donated device call advances every
+        ready lane by up to ``decode_steps`` tokens (attention, sampling,
+        KV/state writes, EOS/length bookkeeping all on-device in a
+        fori_loop); the host gets back one (tokens, emitted, finished)
+        transfer and only does block accounting + scheduler feedback.
+
+        Lane layout: recurrent families are slot-positional (their state
+        lives per-slot inside the cache); attention families gather the
+        ready slots into a pow2 batch bucket.  Table width rides its own
+        pow2 ladder, so batch/page churn never changes the traced shapes
+        beyond the bounded bucket set."""
+        n_steps = self.decode_steps
+        # per-lane step budgets: cap = tokens until forced finish
+        # (max_new_tokens / max_seq_len), grant = KV reserved ahead of the
+        # call (a short grant pauses the lane rather than overrunning)
+        plan = []                              # (slot, rid, budget, cap)
+        for slot, rid in ready:
+            r = self._requests[rid]
+            cap = min(r.max_new_tokens - r.generated,
+                      (self.max_seq_len - 1) - r.context_len)
+            cap = max(1, cap)
+            want = min(n_steps, cap)
+            grant = self.kv.grow_upto(rid, want - 1) if want > 1 else 0
+            if grant:
+                self._sync_block_table(r)
+            plan.append((slot, rid, grant + 1, cap))
+
+        # ladder floors (8 lanes / 4 pages): padding a tiny batch up to
+        # the floor costs almost nothing to execute, but every ladder
+        # rung below it is a whole XLA compile of the fused loop — the
+        # floors keep short-lived small engines from spending their
+        # entire run compiling rungs they graduate out of
+        if self._slot_state:
+            nb = self.n_slots
+            lane_of = {slot: slot for slot, _ in ready}
+        else:
+            nb = _pow2_bucket(len(ready), floor=8, cap=self.n_slots)
+            lane_of = {slot: j for j, (slot, _) in enumerate(ready)}
+        p_used = max(len(self.kv.block_table(rid)) for _, rid in ready)
+        pb = _pow2_bucket(p_used, floor=4, cap=self._max_pages)
+
+        last = np.zeros(nb, np.int32)
+        cl = np.zeros(nb, np.int32)
+        tables = np.full((nb, pb), SCRATCH_BLOCK, np.int32)
+        budgets = np.zeros(nb, np.int32)
+        caps = np.ones(nb, np.int32)
+        eos = np.full(nb, -1, np.int32)
+        temps = np.zeros(nb, np.float32)
+        seeds = np.zeros(nb, np.uint32)
+        counters = np.zeros(nb, np.int32)
+        for slot, rid, budget, cap in plan:
+            r = self._requests[rid]
+            lane = lane_of[slot]
+            last[lane] = self._last_token[slot]
+            cl[lane] = self._cache_len[slot]
+            tables[lane] = self._block_tables[slot, :pb]
+            budgets[lane] = budget
+            caps[lane] = cap
+            eos[lane] = r.eos_token
+            temps[lane] = r.temperature
+            seeds[lane] = _rid_seed(rid)
+            counters[lane] = r.generated
+
+        buf, emitted, fin, self._cache = self._fused_fn(
+            self.params, self._cache, jnp.asarray(last),
+            jnp.asarray(cl), jnp.asarray(tables), jnp.asarray(budgets),
+            jnp.asarray(caps), jnp.asarray(eos), jnp.asarray(temps),
+            jnp.asarray(seeds), jnp.asarray(counters), n_steps=n_steps,
+            all_greedy=bool((temps <= 0.0).all()))
+        # the ONE batched device->host transfer for this (multi-)step
+        buf, emitted, fin = jax.device_get((buf, emitted, fin))
+        self.metrics.decode_iterations += n_steps
+        self.metrics.fused_steps += 1
+
+        progressing, progressed = [], []
+        for slot, rid, _, _ in plan:
+            lane = lane_of[slot]
+            e = int(emitted[lane])
+            if e == 0:
+                continue
+            r = self._requests[rid]
+            toks = [int(t) for t in buf[lane, :e]]
+            r.output_tokens.extend(toks)
+            self._cache_len[slot] += e
+            self._last_token[slot] = toks[-1]
+            self.metrics.decode_tokens += e
+            if np.isnan(r.ttft):
+                r.ttft = time.monotonic() - r.arrival
+            if fin[lane]:
+                self._finish(r)
+                continue
+            progressing.append(rid)
+            progressed.append(r.generated)
+            # restore the reserve-one-ahead invariant for the next write;
+            # a False return is capacity pressure, relieved by forced
+            # eviction at the next select — same contract as the
+            # orchestrated path's per-token grow
+            if self.kv.grow(rid, 1):
+                self._sync_block_table(r)
+            else:
+                self.metrics.grow_failures += 1
+                self._needs_grow.add(rid)
+        self.scheduler.on_progress_many(progressing, progressed)
+
+    # ------------------------------------------------------ compile budget
+
+    @property
+    def fused_compile_count(self) -> int:
+        """Actual XLA compile count of the fused step (jit cache size).
+
+        Reads jax's (private, but the only per-function counter there
+        is) ``PjitFunction._cache_size``; returns -1 if a jax upgrade
+        removes it, so bound checks degrade to vacuous-pass instead of
+        crashing CI (the compile-counter tests skip on -1)."""
+        counter = getattr(self._fused_fn, "_cache_size", None)
+        return counter() if counter is not None else -1
+
+    def max_fused_compiles(self, n_steps_variants: int = 1) -> int:
+        """Upper bound on fused-step compiles: the bucket-ladder product.
+        Batch churn (admit/evict/finish) can only move shapes along the
+        pow2 ladders, so the jit cache can never exceed this.  The
+        final factor 2 is the all-greedy / mixed-sampling static
+        specialization."""
+        b_ladder = 1 if self._slot_state \
+            else _ladder_size(self.n_slots, floor=8)
+        return b_ladder * _ladder_size(self._max_pages, floor=4) \
+            * n_steps_variants * 2
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):

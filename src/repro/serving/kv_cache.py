@@ -198,6 +198,17 @@ class KVCacheManager:
         a.tokens = t_new
         return True
 
+    def grow_upto(self, request_id: str, new_tokens: int) -> int:
+        """Grow by as many of ``new_tokens`` as currently fit (bounded by
+        ``max_seq_len`` and the free pool); returns the granted token
+        count.  The fused multi-step decode uses this to reserve N
+        tokens of KV ahead of one device call — a partial grant bounds
+        that call's per-lane step budget instead of failing it."""
+        granted = 0
+        while granted < new_tokens and self.grow(request_id, 1):
+            granted += 1
+        return granted
+
     def release(self, request_id: str) -> int:
         """Free the slot + blocks (completion, recompute-eviction, abort)."""
         a = self._held.pop(request_id)

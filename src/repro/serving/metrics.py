@@ -24,7 +24,12 @@ class EngineMetrics:
     prefills: int = 0            # completed prefill passes (swap-ins skip)
     prefill_chunks: int = 0      # chunk forwards run (== prefills if atomic)
     prefill_tokens: int = 0      # true (unpadded) prompt tokens prefilled
-    decode_iterations: int = 0
+    decode_iterations: int = 0   # device decode forwards executed
+    decode_tokens: int = 0       # tokens actually sampled (masked lanes
+                                 # and post-finish fori_loop steps excluded)
+    fused_steps: int = 0         # fused jitted (multi-)step calls issued;
+                                 # each is ONE device dispatch + ONE
+                                 # device->host bookkeeping transfer
     completed: int = 0
     preemptions: int = 0
     forced_evictions: int = 0    # capacity-forced (decode-growth) evictions
@@ -64,6 +69,8 @@ class EngineMetrics:
             "prefills": self.prefills,
             "prefill_chunks": self.prefill_chunks,
             "decode_iterations": self.decode_iterations,
+            "decode_tokens": self.decode_tokens,
+            "fused_steps": self.fused_steps,
             "preemptions": self.preemptions,
             "forced_evictions": self.forced_evictions,
             "grow_failures": self.grow_failures,
