@@ -1,0 +1,267 @@
+"""Gateway overload benchmark: goodput under load with and without
+uncertainty-aware shedding, plus the injected-fault matrix.
+
+Two experiments on the REAL JAX engine (reduced llama config, CPU),
+driven by a virtual clock so deadlines and retry backoff are
+deterministic:
+
+  * overload — a goodput-under-overload curve: the same deadline-bound
+    request stream offered at 1x/2x/4x the engine's service rate
+    (sustained paced arrivals, not a single burst), through three front
+    doors: ``cost`` (bounded queues + uncertainty-aware shedding on the
+    predicted-cost upper quantile), ``tail`` (bounded queues + FCFS
+    tail-drop), and ``none`` (no bounds — every request submitted, the
+    seed behavior).  The stream mixes tight-deadline cheap requests
+    with wide-tail heavy ones whose true decode run monopolises a slot
+    for seconds; deadline violators are timeout-aborted, so
+    ``goodput_requests`` (completions, all deadline-met) and
+    ``goodput_tokens`` (decode - wasted) count only work that reached a
+    deadline-respecting finish.  Under sustained overload the unbounded
+    door turns decoded tokens into waste, and the tail door's queue
+    clogs with heavies that starve the cheap flow — the cost door sheds
+    exactly those, which is the CI-asserted separation.
+
+  * faults — the injected-fault matrix (predictor outage mid-burst,
+    swap-in payload loss, grow exhaustion, deadline storm), each checked
+    for the post-fault invariants: engine drains, KV block accounting
+    conserves, every offered id ends FINISHED / SHED / ABORTED with a
+    reason.  ``conservation_violations`` must be 0 (CI-asserted).
+
+Results merge into BENCH_scheduler.json under the ``gateway`` key.
+
+    PYTHONPATH=src python benchmarks/bench_gateway.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        make_policy)
+from repro.models import build_model
+from repro.serving import Gateway, GatewayConfig, ServeRequest, ServingEngine
+from repro.testing import (FlakyPredictor, VirtualClock,
+                           assert_engine_quiesced, inject_kv_fault)
+
+CFG = get_config("llama3.2-1b", reduced=True)
+
+CHEAP_NEW, HEAVY_NEW = 4, 28          # true decode lengths (tokens)
+CHEAP_TTLT, HEAVY_TTLT = 1.5, 6.0     # per-class SLOs (virtual seconds)
+
+
+def _oracle() -> OraclePredictor:
+    o = OraclePredictor()
+    o.register("cheap", LengthDistribution(np.array([CHEAP_NEW]),
+                                           np.array([1.0])))
+    # heavy requests carry the wide right tail the quantile score targets
+    o.register("heavy", LengthDistribution(
+        np.array([CHEAP_NEW, 4 * HEAVY_NEW]), np.array([0.5, 0.5])))
+    return o
+
+
+def _request(i: int, arrival: float, seed: int = 0,
+             ttlt: float | None = None) -> ServeRequest:
+    """Stream mix: 2/3 cheap/tight-SLO, 1/3 heavy/loose-SLO."""
+    heavy = i % 3 == 2
+    rng = np.random.default_rng(seed * 1000 + i)
+    toks = [int(t) for t in rng.integers(3, CFG.vocab_size, 8)]
+    if ttlt is None:
+        ttlt = HEAVY_TTLT if heavy else CHEAP_TTLT
+    return ServeRequest(
+        request_id=f"o{i}", prompt="heavy" if heavy else "cheap",
+        prompt_tokens=toks,
+        max_new_tokens=HEAVY_NEW if heavy else CHEAP_NEW,
+        temperature=0.0, eos_token=1, arrival=arrival,
+        ttlt_deadline_s=ttlt)
+
+
+def _requests(n: int, ttlt: float, seed: int = 0) -> list[ServeRequest]:
+    """A burst variant of the stream (fault-matrix scenarios)."""
+    return [_request(i, arrival=0.0, seed=seed, ttlt=ttlt)
+            for i in range(n)]
+
+
+def _engine(n_slots: int = 2) -> ServingEngine:
+    return ServingEngine(
+        model=build_model(CFG),
+        scheduler=Scheduler(policy=make_policy("sagesched"),
+                            predictor=_oracle()),
+        n_slots=n_slots, max_seq_len=96, seed=0, clock=VirtualClock())
+
+
+def _gateway(eng: ServingEngine, door: str) -> Gateway:
+    if door == "none":
+        cfg = GatewayConfig(max_inflight=10**9, max_total_queue=10**9,
+                            max_queue_per_tenant=10**9, max_retries=0,
+                            shed_policy="tail")
+    else:
+        cfg = GatewayConfig(max_inflight=4, max_queue_per_tenant=4,
+                            max_total_queue=4, max_retries=1,
+                            retry_backoff_s=0.2, shed_policy=door,
+                            shed_quantile=0.9)
+    return Gateway(eng, cfg)
+
+
+BASE_INTERARRIVAL_S = 0.5     # 1x stream rate: near 2-slot capacity
+
+
+def run_overload_point(factor: int, door: str, n_requests: int,
+                       step_dt: float) -> dict:
+    """Offer the same n-request stream at ``factor``x the base arrival
+    rate (sustained overload), then drain, and account goodput."""
+    eng = _engine()
+    gw = _gateway(eng, door)
+    clock = gw.clock
+    clock.advance(1.0)                  # nonzero arrivals for every req
+    steps_per_arrival = max(1, round(
+        BASE_INTERARRIVAL_S / factor / step_dt))
+    for i in range(n_requests):
+        gw.offer(_request(i, arrival=clock()))
+        for _ in range(steps_per_arrival):
+            gw.step()
+            clock.advance(step_dt)
+    gw.run_until_drained(max_steps=50_000, step_dt=step_dt)
+    gw.assert_all_terminal()
+    conserved = True
+    try:
+        assert_engine_quiesced(eng)
+    except (AssertionError, RuntimeError):
+        conserved = False
+    m = eng.metrics
+    kinds = [k for k, _ in gw.dispositions.values()]
+    completed = kinds.count("FINISHED")   # deadline violators are aborted
+    return {
+        "offered": n_requests,
+        "goodput_requests": completed,
+        "shed": kinds.count("SHED"),
+        "aborted": kinds.count("ABORTED"),
+        "timeout_aborts": m.timeout_aborts,
+        "retries": m.retries,
+        "decode_tokens": m.decode_tokens,
+        "wasted_tokens": m.wasted_tokens,
+        "goodput_tokens": m.decode_tokens - m.wasted_tokens,
+        "conserved": conserved,
+    }
+
+
+def bench_overload(smoke: bool) -> dict:
+    n = 24 if smoke else 36
+    step_dt = 0.1
+    factors = (1, 2) if smoke else (1, 2, 4)
+    curve: dict[str, dict] = {}
+    for factor in factors:
+        row = {door: run_overload_point(factor, door, n, step_dt)
+               for door in ("cost", "tail", "none")}
+        curve[f"{factor}x"] = row
+    return {
+        "n_requests": n,
+        "base_interarrival_s": BASE_INTERARRIVAL_S,
+        "ttlt_deadline_s": {"cheap": CHEAP_TTLT, "heavy": HEAVY_TTLT},
+        "step_dt_s": step_dt,
+        "curve": curve,
+        "conservation_violations": sum(
+            not point["conserved"]
+            for row in curve.values() for point in row.values()),
+    }
+
+
+# ------------------------------------------------------------ fault matrix
+
+def _drain_scenario(eng: ServingEngine, gw: Gateway,
+                    reqs: list[ServeRequest]) -> dict:
+    gw.offer_batch(reqs)
+    gw.run_until_drained(max_steps=50_000, step_dt=0.05)
+    gw.assert_all_terminal()
+    ok = True
+    try:
+        assert_engine_quiesced(eng)
+    except (AssertionError, RuntimeError):
+        ok = False
+    kinds = [k for k, _ in gw.dispositions.values()]
+    return {"offered": len(reqs), "completed": kinds.count("FINISHED"),
+            "shed": kinds.count("SHED"), "aborted": kinds.count("ABORTED"),
+            "conserved": ok}
+
+
+def bench_faults(smoke: bool) -> dict:
+    n = 6 if smoke else 12
+    out = {}
+
+    # predictor outage mid-burst: the gateway's cost scoring degrades to
+    # FCFS tail-drop, recovers when the predictor comes back, no crash
+    flaky = FlakyPredictor(_oracle(), mode="outage", fail_after=2,
+                           n_failures=3)
+    eng = ServingEngine(
+        model=build_model(CFG),
+        scheduler=Scheduler(policy=make_policy("sagesched"),
+                            predictor=flaky),
+        n_slots=2, max_seq_len=96, seed=0, clock=VirtualClock())
+    out["predictor_outage"] = _drain_scenario(
+        eng, _gateway(eng, "cost"), _requests(n, ttlt=30.0))
+    out["predictor_outage"]["injected"] = flaky.faults
+
+    # swap-in payload loss under tight capacity: recompute fallback
+    eng = ServingEngine(
+        model=build_model(CFG),
+        scheduler=Scheduler(policy=make_policy("sagesched"),
+                            predictor=_oracle()),
+        n_slots=2, max_seq_len=96, capacity_tokens=56, block_size=8,
+        preemption_mode="swap", seed=0, clock=VirtualClock())
+    gw = _gateway(eng, "cost")
+    with inject_kv_fault(eng.kv, "swap_in", at_call=0, n_calls=2) as stats:
+        out["swap_in_fault"] = _drain_scenario(
+            eng, gw, _requests(n, ttlt=60.0, seed=1))
+    out["swap_in_fault"]["injected"] = stats["faults"]
+    out["swap_in_fault"]["recovered_by_recompute"] = \
+        eng.metrics.swap_in_faults
+
+    # grow exhaustion: pressure relief absorbs it
+    eng = ServingEngine(
+        model=build_model(CFG),
+        scheduler=Scheduler(policy=make_policy("sagesched"),
+                            predictor=_oracle()),
+        n_slots=2, max_seq_len=96, capacity_tokens=64, block_size=8,
+        seed=0, clock=VirtualClock())
+    with inject_kv_fault(eng.kv, "grow", at_call=4, n_calls=4) as stats:
+        out["grow_fault"] = _drain_scenario(
+            eng, _gateway(eng, "cost"), _requests(n, ttlt=60.0, seed=2))
+    out["grow_fault"]["injected"] = stats["faults"]
+
+    # deadline storm: tight budgets, every timeout abort must release
+    eng = _engine()
+    out["deadline_storm"] = _drain_scenario(
+        eng, _gateway(eng, "cost"), _requests(2 * n, ttlt=0.4, seed=3))
+    out["deadline_storm"]["timeout_aborts"] = eng.metrics.timeout_aborts
+
+    out["conservation_violations"] = sum(
+        not s["conserved"] for s in out.values() if isinstance(s, dict))
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: minimal sizes")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_scheduler.json"))
+    args = ap.parse_args(argv)
+
+    gateway = {
+        "overload": bench_overload(args.smoke),
+        "faults": bench_faults(args.smoke),
+    }
+    path = Path(args.out)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["gateway"] = gateway
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(json.dumps(gateway, indent=2, sort_keys=True))
+    return gateway
+
+
+if __name__ == "__main__":
+    main()

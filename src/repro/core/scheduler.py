@@ -314,9 +314,24 @@ class Scheduler:
         self._live: dict[str, ScheduledRequest] = {}
         self._arrival_seq = 0  # tie-break for identical clock readings
         self._now = 0.0
-        self.stats = {"predictions": 0, "refreshes": 0, "completions": 0}
+        self.stats = {"predictions": 0, "refreshes": 0, "completions": 0,
+                      "prediction_failures": 0}
+        self.degraded = False  # last predictor call failed (see admit_batch)
+        self._fallback_dist: LengthDistribution | None = None
 
     # ------------------------------------------------------------- lifecycle
+
+    def _prediction_free_prior(self) -> LengthDistribution:
+        """Static fallback when the predictor is unavailable: a flat
+        prior over a coarse length grid up to ``noise_max_len``.  Every
+        request gets the SAME distribution, so no request is ranked on
+        (stale or corrupt) per-request information."""
+        if self._fallback_dist is None:
+            grid = np.unique(np.linspace(
+                1, max(2, self.noise_max_len), 16).astype(np.int64))
+            self._fallback_dist = LengthDistribution(
+                grid, np.full(grid.size, 1.0 / grid.size))
+        return self._fallback_dist
 
     def admit(self, request_id: str, prompt: str, input_len: int,
               arrival: float | None = None,
@@ -381,9 +396,21 @@ class Scheduler:
             # predict_many: the batched path when it is authoritative for
             # this predictor class, else a scalar-predict loop (honors
             # subclasses that override only the scalar method)
-            preds = self.predictor.predict_many(
-                [prompts[j] for j in missing],
-                [input_lens[j] for j in missing])
+            try:
+                preds = self.predictor.predict_many(
+                    [prompts[j] for j in missing],
+                    [input_lens[j] for j in missing])
+                self.degraded = False
+            except Exception:
+                # predictor / history store down: degrade to a static
+                # prediction-free prior instead of failing admission —
+                # Gittins over a flat prior carries no per-request
+                # information, so ordering falls back to arrival-driven
+                # behavior; the gateway reads ``degraded`` and switches
+                # its shed policy to FCFS tail-drop + static limits
+                self.stats["prediction_failures"] += len(missing)
+                self.degraded = True
+                preds = [self._prediction_free_prior() for _ in missing]
             for j, d in zip(missing, preds):
                 length_dists[j] = d
             self.stats["predictions"] += len(missing)

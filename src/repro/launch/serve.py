@@ -18,7 +18,7 @@ from ..core import Scheduler, make_policy
 from ..core.policies import POLICY_NAMES
 from ..data import ByteTokenizer
 from ..models import build_model
-from ..serving import ServeRequest, ServingEngine
+from ..serving import Gateway, GatewayConfig, ServeRequest, ServingEngine
 
 
 def main():
@@ -36,6 +36,24 @@ def main():
                     help="decode tokens per host round-trip (fused mode)")
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) config — TPU slice required")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the bounded-admission gateway "
+                         "(ACCEPT/QUEUE/SHED + deadlines + retries) "
+                         "instead of raw submit")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="gateway in-flight cap (default 4 * n_slots)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="gateway per-tenant queue bound")
+    ap.add_argument("--shed-policy", default="cost",
+                    choices=("cost", "tail"),
+                    help="cost = shed worst predicted-cost quantile; "
+                         "tail = FCFS tail-drop")
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    help="abort if first token misses this many seconds")
+    ap.add_argument("--ttlt-deadline", type=float, default=None,
+                    help="abort if last token misses this many seconds")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget for shed requests")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
@@ -60,10 +78,26 @@ def main():
             request_id=f"req-{i}", prompt=prompt,
             prompt_tokens=tok.encode(prompt)[:64],
             max_new_tokens=int(rng.integers(8, 48)),
-            eos_token=tok.eos_id, arrival=t0 + i * 0.01)
-        engine.submit(r)
+            eos_token=tok.eos_id, arrival=t0 + i * 0.01,
+            ttft_deadline_s=args.ttft_deadline,
+            ttlt_deadline_s=args.ttlt_deadline)
         reqs.append(r)
-    engine.run_until_done()
+
+    if args.gateway:
+        gw = Gateway(engine, GatewayConfig(
+            max_inflight=args.max_inflight,
+            max_queue_per_tenant=args.max_queue,
+            max_total_queue=4 * args.max_queue,
+            shed_policy=args.shed_policy,
+            max_retries=args.max_retries))
+        verdicts = gw.offer_batch(reqs)
+        gw.run_until_drained()
+        counts = {v.value: verdicts.count(v) for v in set(verdicts)}
+        print(f"gateway verdicts: {counts}")
+    else:
+        for r in reqs:
+            engine.submit(r)
+        engine.run_until_done()
     print(f"arch={cfg.name} policy={args.policy} "
           f"{engine.metrics.summary(reqs)}")
 

@@ -1,9 +1,11 @@
-"""Real serving substrate: engine, KV manager, requests, metrics."""
+"""Real serving substrate: engine, gateway, KV manager, requests, metrics."""
 
-from .engine import ServingEngine
+from .engine import EngineStallError, ServingEngine
+from .gateway import Gateway, GatewayConfig, Verdict
 from .kv_cache import KVCacheManager
 from .metrics import EngineMetrics
 from .request import RequestState, ServeRequest
 
-__all__ = ["ServingEngine", "KVCacheManager", "EngineMetrics",
-           "RequestState", "ServeRequest"]
+__all__ = ["ServingEngine", "EngineStallError", "Gateway", "GatewayConfig",
+           "Verdict", "KVCacheManager", "EngineMetrics", "RequestState",
+           "ServeRequest"]

@@ -54,7 +54,9 @@ from __future__ import annotations
 import functools
 import time
 import zlib
+from collections import Counter
 from dataclasses import dataclass, field
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +71,16 @@ from .kv_cache import SCRATCH_BLOCK, KVCacheManager
 from .metrics import EngineMetrics
 from .request import RequestState, ServeRequest
 
-__all__ = ["ServingEngine"]
+__all__ = ["ServingEngine", "EngineStallError"]
+
+
+class EngineStallError(RuntimeError):
+    """``run_until_done`` exhausted its step budget with work still live.
+
+    The message carries the full stall diagnosis (per-state request
+    counts, queue depth, block-pool occupancy, pressure set) so a
+    livelock — e.g. an injected fault that wedged admission — fails
+    loudly instead of timing out silently."""
 
 
 def _pad_len(n: int, quantum: int = 64) -> int:
@@ -103,6 +114,11 @@ class ServingEngine:
     service_model: ServiceModel | None = None
     step_mode: str = "fused"               # "fused" | "orchestrated"
     decode_steps: int = 1                  # decode tokens per host round-trip
+    # Injectable time source (TTFT/TTLT stamps, arrival defaults).  The
+    # gateway's deadline enforcement shares this clock, so tests and
+    # benchmarks drive deadline storms deterministically with a virtual
+    # clock instead of racing wall time.
+    clock: Callable[[], float] = time.monotonic
 
     _requests: dict[str, ServeRequest] = field(default_factory=dict)
     _running: list[str] = field(default_factory=list)
@@ -244,15 +260,18 @@ class ServingEngine:
         """Enqueue one request — the B = 1 case of ``submit_batch``."""
         self.submit_batch([request])
 
-    def submit_batch(self, requests: list[ServeRequest]) -> None:
+    def submit_batch(self, requests: list[ServeRequest],
+                     length_dists: list | None = None) -> None:
         """Enqueue a burst of requests through one batched admission:
         a single ``Scheduler.admit_batch`` call (one predict_batch over
         the burst's prompts, one BatchState append).  Unstamped arrivals
         (``arrival == 0.0``) share one clock reading — the burst arrived
-        together."""
+        together.  ``length_dists`` forwards caller-side predictions
+        (the gateway predicts once for shed scoring and hands the same
+        distributions down, instead of predicting twice)."""
         if not requests:
             return
-        now = time.monotonic()
+        now = self.clock()
         arrivals = [now if r.arrival == 0.0 else r.arrival
                     for r in requests]
         # admit first: admit_batch rejects duplicates before mutating any
@@ -261,16 +280,26 @@ class ServingEngine:
             [r.request_id for r in requests],
             [r.prompt for r in requests],
             [r.input_len for r in requests],
-            arrivals=arrivals)
+            arrivals=arrivals, length_dists=length_dists)
         for r, arrival in zip(requests, arrivals):
             r.arrival = arrival
             self._requests[r.request_id] = r
 
-    def abort(self, request_id: str) -> None:
+    def abort(self, request_id: str, reason: str = "abort") -> None:
+        """Terminate a request in ANY non-terminal lifecycle state —
+        waiting, mid-chunked-prefill, decoding, pressure-stalled, or
+        swapped out — releasing every device block, the slot, and any
+        host swap payload.  Tokens already decoded for it are accounted
+        as wasted (goodput != throughput)."""
         r = self._requests.get(request_id)
         if r and not r.done:
             self._release(r)
             r.state = RequestState.ABORTED
+            r.finish_reason = reason
+            self.metrics.aborted += 1
+            self.metrics.wasted_tokens += r.generated
+            if reason.endswith("_deadline"):
+                self.metrics.timeout_aborts += 1
             self.scheduler.on_abort(request_id)
 
     @property
@@ -412,33 +441,52 @@ class ServingEngine:
     def _admit(self, r: ServeRequest) -> None:
         rid = r.request_id
         if self.preemption_mode == "swap" and self.kv.is_swapped(rid):
-            slot, payload = self.kv.swap_in(rid)
-            tokens = self.kv.tokens_of(rid)
-            r.slot = slot
-            self._bind_slot(r, slot)
-            self._restore_payload(r, payload)
-            r.n_swap_restores += 1
-            self.metrics.swap_ins += 1
-            self.metrics.swapped_in_tokens += tokens
-            self.metrics.modeled_swap_s += self.service_model.swap_time(
-                tokens, self.kv.block_size)
-            # a request preempted while awaiting a growth block comes
-            # back one block short of its next write position — re-grow
-            # (or re-mark the pressure) before it may decode again
-            if self._cache_len[slot] >= 0 \
-                    and self.kv.tokens_of(rid) <= self._cache_len[slot]:
-                if self.kv.grow(rid, 1):
-                    self._sync_block_table(r)
-                else:
-                    self.metrics.grow_failures += 1
-                    self._needs_grow.add(rid)
-            return
+            try:
+                slot, payload = self.kv.swap_in(rid)
+            except RuntimeError:
+                # capacity shortfalls resolve next step (re-raise: the
+                # step loop leaves the request queued) — but a failure
+                # while the pool HAD room is a faulty payload/IO path;
+                # drop the host copy and recompute instead of
+                # livelocking on a restore that can never succeed
+                need = self.kv.blocks_for(self.kv.swapped_tokens_of(rid))
+                if self.kv.free_slots == 0 or need > self.kv.free_blocks:
+                    raise
+                self.metrics.swap_in_faults += 1
+                self.kv.drop_swapped(rid)
+                r.prefill_pos = 0
+            else:
+                self._restore_swapped(r, slot, payload)
+                return
         self.kv.drop_swapped(rid)
         ctx_len = r.context_len      # replay prompt + outputs on recompute
         slot = self.kv.allocate(rid, ctx_len)
         self._bind_slot(r, slot)
         r.prefill_pos = 0
         self._cache_len[slot] = -1   # not decode-ready until prefilled
+
+    def _restore_swapped(self, r: ServeRequest, slot: int,
+                         payload: dict) -> None:
+        rid = r.request_id
+        tokens = self.kv.tokens_of(rid)
+        r.slot = slot
+        self._bind_slot(r, slot)
+        self._restore_payload(r, payload)
+        r.n_swap_restores += 1
+        self.metrics.swap_ins += 1
+        self.metrics.swapped_in_tokens += tokens
+        self.metrics.modeled_swap_s += self.service_model.swap_time(
+            tokens, self.kv.block_size)
+        # a request preempted while awaiting a growth block comes
+        # back one block short of its next write position — re-grow
+        # (or re-mark the pressure) before it may decode again
+        if self._cache_len[slot] >= 0 \
+                and self.kv.tokens_of(rid) <= self._cache_len[slot]:
+            if self.kv.grow(rid, 1):
+                self._sync_block_table(r)
+            else:
+                self.metrics.grow_failures += 1
+                self._needs_grow.add(rid)
 
     # -------------------------------------------------------------- prefill
 
@@ -555,9 +603,10 @@ class ServingEngine:
 
     # ------------------------------------------------------------- pressure
 
-    def _finish(self, r: ServeRequest) -> None:
+    def _finish(self, r: ServeRequest, reason: str = "eos") -> None:
         r.state = RequestState.FINISHED
-        r.ttlt = time.monotonic() - r.arrival
+        r.finish_reason = reason
+        r.ttlt = self.clock() - r.arrival
         self._release(r)
         self.scheduler.on_complete(r.request_id, r.generated)
         self.metrics.completed += 1
@@ -584,7 +633,7 @@ class ServingEngine:
                 # sole resident request and still no room: its context has
                 # filled the physical pool — terminate by truncation, the
                 # same way the max_seq_len guard ends an endless request
-                self._finish(r)
+                self._finish(r, reason="truncated")
                 continue
             if not candidates:
                 break
@@ -624,7 +673,7 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine iteration. Returns number of running requests."""
-        now = time.monotonic()
+        now = self.clock()
         self.scheduler.set_now(now)
         selected = self._select_running()
         sel = set(selected)
@@ -645,9 +694,7 @@ class ServingEngine:
                             > self.kv.n_blocks:
                         # the context can NEVER fit the physical pool:
                         # reject instead of livelocking in WAITING
-                        self._release(r)
-                        r.state = RequestState.ABORTED
-                        self.scheduler.on_abort(rid)
+                        self.abort(rid, reason="infeasible_prompt")
                         continue
                     # transient shortfall (e.g. forced-top guard racing
                     # an external hog): leave the request queued
@@ -717,10 +764,13 @@ class ServingEngine:
             r.output_tokens.append(tok)
             self.metrics.decode_tokens += 1
             if np.isnan(r.ttft):
-                r.ttft = time.monotonic() - r.arrival
-            if tok == r.eos_token or r.generated >= r.max_new_tokens \
+                r.ttft = self.clock() - r.arrival
+            if tok == r.eos_token:
+                self._finish(r, reason="eos")
+                continue
+            if r.generated >= r.max_new_tokens \
                     or r.context_len >= self.max_seq_len - 1:
-                self._finish(r)
+                self._finish(r, reason="length")
                 continue
             progressing.append(rid)
             progressed.append(r.generated)
@@ -823,9 +873,10 @@ class ServingEngine:
             self._last_token[slot] = toks[-1]
             self.metrics.decode_tokens += e
             if np.isnan(r.ttft):
-                r.ttft = time.monotonic() - r.arrival
+                r.ttft = self.clock() - r.arrival
             if fin[lane]:
-                self._finish(r)
+                self._finish(r, reason="eos" if toks[-1] == r.eos_token
+                             else "length")
                 continue
             progressing.append(rid)
             progressed.append(r.generated)
@@ -864,9 +915,27 @@ class ServingEngine:
         return b_ladder * _ladder_size(self._max_pages, floor=4) \
             * n_steps_variants * 2
 
+    def stall_report(self) -> dict:
+        """Live-state diagnosis: per-state request counts, queue depth,
+        pool occupancy, pressure set — the payload of EngineStallError."""
+        states = Counter(r.state.name for r in self._requests.values())
+        waiting = [rid for rid, r in self._requests.items()
+                   if not r.done and rid not in self._running]
+        return {
+            "request_states": dict(states),
+            "queue_depth": len(waiting),
+            "running": list(self._running),
+            "needs_grow": sorted(self._needs_grow),
+            "kv": self.kv.conservation(),
+        }
+
     def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
             if not self.has_work:
                 return
             self.step()
-        raise RuntimeError("run_until_done: step budget exhausted")
+        if not self.has_work:
+            return
+        raise EngineStallError(
+            f"run_until_done: step budget ({max_steps}) exhausted with "
+            f"work still live — {self.stall_report()}")

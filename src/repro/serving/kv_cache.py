@@ -154,6 +154,52 @@ class KVCacheManager:
     def swapped_tokens_of(self, request_id: str) -> int:
         return self._swapped[request_id].tokens
 
+    # ---------------------------------------------------------- invariants
+
+    def conservation(self) -> dict:
+        """Snapshot of the pool accounting the conservation invariant is
+        stated over (free + held == device pool; swap usage <= host pool)."""
+        return {
+            "n_blocks": self.n_blocks,
+            "free_blocks": len(self._free_blocks),
+            "held_blocks": self.used_blocks,
+            "free_slots": len(self._free_slots),
+            "held_slots": len(self._held),
+            "n_slots": self.n_slots,
+            "swapped_blocks": self.swapped_blocks_used,
+            "swap_blocks": self.swap_blocks,
+        }
+
+    def assert_conserved(self) -> None:
+        """Block/slot conservation: every device block is either free or
+        held by exactly one request (scratch excluded from both), every
+        slot is free or bound once, and the host pool is within capacity.
+        Raises ``RuntimeError`` with the full ledger on any violation —
+        the fault-injection harness calls this after every injected fault.
+        """
+        errs = []
+        held_blocks = [b for a in self._held.values() for b in a.blocks]
+        if len(self._free_blocks) + len(held_blocks) != self.n_blocks:
+            errs.append("free+held blocks != pool")
+        if len(set(self._free_blocks)) != len(self._free_blocks):
+            errs.append("duplicate free blocks")
+        if len(set(held_blocks)) != len(held_blocks):
+            errs.append("block held by two requests")
+        if set(self._free_blocks) & set(held_blocks):
+            errs.append("block both free and held")
+        if SCRATCH_BLOCK in self._free_blocks or SCRATCH_BLOCK in held_blocks:
+            errs.append("scratch block entered the pool")
+        held_slots = [a.slot for a in self._held.values()]
+        if sorted(self._free_slots + held_slots) != list(range(self.n_slots)):
+            errs.append("slot ledger broken")
+        if self.swapped_blocks_used > self.swap_blocks:
+            errs.append("host swap pool over capacity")
+        if set(self._held) & set(self._swapped):
+            errs.append("request both resident and swapped")
+        if errs:
+            raise RuntimeError(
+                f"KV conservation violated: {errs}; {self.conservation()}")
+
     # ------------------------------------------------------------ admission
 
     def can_admit(self, context_len: int, growth_reserve: int = 0) -> bool:

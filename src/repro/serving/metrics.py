@@ -39,12 +39,31 @@ class EngineMetrics:
     swapped_out_tokens: int = 0
     swapped_in_tokens: int = 0
     modeled_swap_s: float = 0.0  # ServiceModel.swap_time over swap events
+    # ----- overload / failure accounting (goodput != throughput) -----
+    aborted: int = 0             # requests ended by abort() (any reason)
+    shed: int = 0                # gateway load-shed verdicts (terminal)
+    retries: int = 0             # gateway re-admission attempts
+    timeout_aborts: int = 0      # TTFT/TTLT deadline-triggered aborts
+    wasted_tokens: int = 0       # tokens decoded for requests that were
+                                 # later aborted / shed / timed out
+    swap_in_faults: int = 0      # unexpected swap_in failures that fell
+                                 # back to recompute (pool had room)
+
+    def _failure_counters(self) -> dict:
+        return {
+            "aborted": self.aborted,
+            "shed": self.shed,
+            "retries": self.retries,
+            "timeout_aborts": self.timeout_aborts,
+            "wasted_tokens": self.wasted_tokens,
+            "goodput_tokens": self.decode_tokens - self.wasted_tokens,
+        }
 
     def summary(self, requests) -> dict:
         done = [r for r in requests
                 if np.isfinite(getattr(r, "ttlt", np.nan))]
         if not done:
-            return {"completed": 0}
+            return {"completed": 0, **self._failure_counters()}
         ttft = np.array([r.ttft for r in done])
         ttlt = np.array([r.ttlt for r in done])
         gen = np.array([r.generated for r in done], np.float64)
@@ -77,4 +96,5 @@ class EngineMetrics:
             "swap_outs": self.swap_outs,
             "swap_ins": self.swap_ins,
             "modeled_swap_s": self.modeled_swap_s,
+            **self._failure_counters(),
         }

@@ -14,6 +14,7 @@ class RequestState(enum.Enum):
     SWAPPED = "swapped"
     FINISHED = "finished"
     ABORTED = "aborted"
+    SHED = "shed"          # rejected by gateway load-shedding (terminal)
 
 
 @dataclass
@@ -26,6 +27,13 @@ class ServeRequest:
     temperature: float = 0.6          # the paper's default sampling temp
     arrival: float = 0.0
 
+    # SLO deadlines (seconds from arrival); None defers to the gateway's
+    # configured defaults.  The bare engine never enforces them — deadline
+    # aborts are the gateway's job, so engine-only users see no change.
+    ttft_deadline_s: float | None = None
+    ttlt_deadline_s: float | None = None
+    tenant: str = "default"           # gateway per-tenant queue key
+
     state: RequestState = RequestState.WAITING
     output_tokens: list[int] = field(default_factory=list)
     slot: int = -1                    # engine batch slot while RUNNING
@@ -34,6 +42,10 @@ class ServeRequest:
     ttlt: float = float("nan")
     n_preemptions: int = 0
     n_swap_restores: int = 0          # readmissions that skipped re-prefill
+    finish_reason: str = ""           # why the request reached its terminal
+                                      # state ("eos", "length", "truncated",
+                                      # "infeasible_prompt", deadline/shed
+                                      # reasons, or a caller-supplied one)
 
     @property
     def input_len(self) -> int:
@@ -49,4 +61,5 @@ class ServeRequest:
 
     @property
     def done(self) -> bool:
-        return self.state in (RequestState.FINISHED, RequestState.ABORTED)
+        return self.state in (RequestState.FINISHED, RequestState.ABORTED,
+                              RequestState.SHED)

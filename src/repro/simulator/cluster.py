@@ -56,8 +56,33 @@ from .workload import SimRequest
 __all__ = [
     "ClusterResult", "ClusterScheduler", "NodeSchedulerView",
     "Router", "JoinShortestWorkRouter", "CostAwareRouter", "make_router",
-    "ROUTER_NAMES", "simulate_cluster", "measure_scheduler_overhead",
+    "ROUTER_NAMES", "NodeKill", "NodeSlow", "simulate_cluster",
+    "measure_scheduler_overhead",
 ]
+
+
+# ----------------------------------------------------------- fault events
+
+@dataclass(frozen=True)
+class NodeKill:
+    """Kill node ``node_id`` at simulated time ``at``: its in-flight
+    requests are re-routed to surviving nodes (host-resident swap
+    payloads move with them; device-resident KV is re-prefilled) or
+    aborted when no node remains."""
+
+    node_id: int
+    at: float
+
+
+@dataclass(frozen=True)
+class NodeSlow:
+    """Slow node ``node_id`` down by ``factor`` from time ``at`` on —
+    thermal throttling / degraded interconnect.  Compounding: two
+    NodeSlow events multiply."""
+
+    node_id: int
+    at: float
+    factor: float = 4.0
 
 
 # ---------------------------------------------------------------- routers
@@ -72,6 +97,13 @@ class Router:
     """
 
     name = "base"
+    dead: frozenset = frozenset()   # nodes removed from placement
+
+    def mark_dead(self, node_id: int) -> None:
+        """Remove a node from future placement decisions (node-kill
+        fault).  Instance-level copy-on-write so the class default
+        stays shared and empty."""
+        self.dead = set(self.dead) | {int(node_id)}
 
     def route(self, req: SimRequest) -> int:
         raise NotImplementedError
@@ -117,7 +149,12 @@ class JoinShortestWorkRouter(Router):
             0.0, self.outstanding
             - (req.arrival - self._last_t) * self.drain_rate)
         self._last_t = req.arrival
-        n = int(np.argmin(self.outstanding))
+        if self.dead:
+            masked = self.outstanding.copy()
+            masked[list(self.dead)] = np.inf
+            n = int(np.argmin(masked))
+        else:
+            n = int(np.argmin(self.outstanding))
         self.outstanding[n] += req.input_len + 2.0 * self.output_guess
         return n
 
@@ -211,18 +248,24 @@ class CostAwareRouter(Router):
         need_kv = int(req.input_len + dist.mean)
         fits = np.array([self.kv[n].can_admit(need_kv)
                          for n in range(self.n_nodes)])
+        out = self.outstanding
+        if self.dead:
+            fits[list(self.dead)] = False
+            out = out.copy()
+            out[list(self.dead)] = np.inf
         if fits.any():
             # among nodes with headroom: least outstanding predicted work
-            masked = np.where(fits, self.outstanding, np.inf)
+            masked = np.where(fits, out, np.inf)
             n = int(np.argmin(masked))
         else:
             # cluster saturated: least outstanding predicted work (the
             # KV mirror freezes once its slot pool is exhausted, so
             # headroom alone would funnel all overload to one node);
-            # ties go to the node with the most KV headroom
+            # ties go to the node with the most KV headroom; dead nodes
+            # carry inf outstanding so they only win if every node died
             heads = np.array([self.headroom(i)
                               for i in range(self.n_nodes)], np.float64)
-            n = int(np.lexsort((-heads, self.outstanding))[0])
+            n = int(np.lexsort((-heads, out))[0])
         kv = self.kv[n]
         if kv.free_slots > 0 and kv.blocks_for(need_kv) <= kv.free_blocks:
             # mirror the token charge; under deep backlog (> max_batch
@@ -429,6 +472,8 @@ class ClusterResult:
     mean_ttft: float
     router: str = "jsow"
     requests_per_node: list[int] = field(default_factory=list)
+    aborted: list[str] = field(default_factory=list)  # no node left to adopt
+    migrated: int = 0           # in-flight requests re-routed off dead nodes
 
     @property
     def n_nodes(self) -> int:
@@ -442,7 +487,8 @@ class ClusterResult:
 def simulate_cluster(requests: list[SimRequest], scheduler_factory,
                      n_nodes: int, spec: NodeSpec | None = None, *,
                      router="jsow", shared_state: bool = True,
-                     route_quantile: float | None = None) -> ClusterResult:
+                     route_quantile: float | None = None,
+                     faults=None) -> ClusterResult:
     """Event-driven multi-node simulation under a central scheduler.
 
     Arrival, step-complete, and finish events interleave across nodes:
@@ -465,6 +511,14 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
     (tests/test_cluster.py parity tests).
 
     route_quantile: see ``CostAwareRouter`` (cost router only).
+
+    faults: optional list of ``NodeKill`` / ``NodeSlow`` events,
+    interleaved with arrivals in simulated-time order.  A kill drains
+    the node (``NodeSimulator.kill``): swapped-out requests keep their
+    host-resident payload and pay swap-in on the adoptive node;
+    device-resident ones re-prefill, keeping already-streamed tokens.
+    Orphans are re-routed through the (dead-node-masked) router, or
+    recorded in ``ClusterResult.aborted`` when no node survives.
     """
     reqs = sorted(requests, key=lambda r: r.arrival)
     if shared_state:
@@ -484,13 +538,43 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
     sims = [NodeSimulator(views[n], spec, node_id=n)
             for n in range(n_nodes)]
     per_node = [0] * n_nodes
+    fault_q = sorted(faults or [], key=lambda f: (f.at, f.node_id))
+    fi, aborted, migrated = 0, [], 0
 
     i, n_req = 0, len(reqs)
     while True:
         busy = [s for s in sims if s.busy]
         t_next = reqs[i].arrival if i < n_req else float("inf")
-        if i < n_req and (not busy
-                          or t_next <= min(s.now for s in busy) + 1e-12):
+        t_fault = fault_q[fi].at if fi < len(fault_q) else float("inf")
+        now_min = min((s.now for s in busy), default=float("inf"))
+        if fi < len(fault_q) and t_fault <= min(t_next, now_min) + 1e-12:
+            # fault fires before the next arrival and before any busy
+            # node's frontier — kills beat same-tick arrivals so the
+            # burst routes around the dead node
+            f = fault_q[fi]
+            fi += 1
+            if isinstance(f, NodeSlow):
+                sims[f.node_id].slow_down(f.factor)
+            else:
+                orphans = sims[f.node_id].kill(f.at)
+                router_obj.mark_dead(f.node_id)
+                if not any(s.alive for s in sims):
+                    aborted.extend(lv.req.request_id for lv in orphans)
+                elif orphans:
+                    homes = router_obj.route_batch(
+                        [lv.req for lv in orphans])
+                    for lv, nid in zip(orphans, homes):
+                        sims[nid].adopt(lv, f.at)
+                        per_node[nid] += 1
+                        migrated += 1
+            continue
+        if i < n_req and (not busy or t_next <= now_min + 1e-12):
+            if not any(s.alive for s in sims):
+                # whole cluster is down: remaining arrivals can never be
+                # served — record them instead of routing into a wall
+                aborted.extend(r.request_id for r in reqs[i:])
+                i = n_req
+                continue
             j = i + 1  # coalesce the same-tick burst (identical stamps)
             while j < n_req and reqs[j].arrival <= t_next + 1e-12:
                 j += 1
@@ -503,16 +587,20 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
         if not busy:
             break
         s = min(busy, key=lambda s: (s.now, s.node_id))
-        s.step(horizon=t_next)
+        s.step(horizon=min(t_next, t_fault))
 
     results = [s.finish() for s in sims]
     all_m = [m for res in results for m in res.metrics]
     return ClusterResult(
         node_results=results,
-        mean_ttlt=float(np.mean([m.ttlt for m in all_m])),
-        mean_ttft=float(np.mean([m.ttft for m in all_m])),
+        mean_ttlt=float(np.mean([m.ttlt for m in all_m])) if all_m
+        else float("nan"),
+        mean_ttft=float(np.mean([m.ttft for m in all_m])) if all_m
+        else float("nan"),
         router=getattr(router_obj, "name", str(router)),
-        requests_per_node=per_node)
+        requests_per_node=per_node,
+        aborted=aborted,
+        migrated=migrated)
 
 
 # ------------------------------------------------- Fig. 12 overhead probe

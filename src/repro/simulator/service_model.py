@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["NodeSpec", "ServiceModel"]
+__all__ = ["NodeSpec", "ServiceModel", "ScaledServiceModel"]
 
 
 @dataclass(frozen=True)
@@ -171,3 +171,33 @@ class ServiceModel:
             kv_tokens = -(-int(kv_tokens) // block_size) * block_size
         raw = kv_tokens * s.kv_bytes_per_token / s.swap_bandwidth
         return raw * (1.0 - s.swap_overlap)
+
+
+@dataclass
+class ScaledServiceModel(ServiceModel):
+    """A node running uniformly slower (or faster) by a constant factor —
+    thermal throttling, a degraded interconnect, or an injected
+    slow-node fault (``NodeSimulator.slow_down``).  Every primitive time
+    is scaled, so the simulator's closed-form fast-forward math stays
+    internally consistent; composite helpers (``prefill_time_chunked``)
+    inherit the scaling through the primitives they call."""
+
+    factor: float = 1.0
+
+    def decode_iteration_time(self, batch_size, total_kv_tokens):
+        return self.factor * super().decode_iteration_time(
+            batch_size, total_kv_tokens)
+
+    def decode_run_time(self, batch_size, start_kv_tokens, n_steps):
+        return self.factor * super().decode_run_time(
+            batch_size, start_kv_tokens, n_steps)
+
+    def prefill_time(self, input_tokens):
+        return self.factor * super().prefill_time(input_tokens)
+
+    def prefill_chunk_time(self, chunk_tokens, past_tokens):
+        return self.factor * super().prefill_chunk_time(
+            chunk_tokens, past_tokens)
+
+    def swap_time(self, kv_tokens, block_size=1):
+        return self.factor * super().swap_time(kv_tokens, block_size)

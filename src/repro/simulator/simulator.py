@@ -53,7 +53,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core.scheduler import Scheduler
-from .service_model import NodeSpec, ServiceModel
+from .service_model import NodeSpec, ScaledServiceModel, ServiceModel
 from .workload import SimRequest
 
 __all__ = ["RequestMetrics", "SimResult", "NodeSimulator", "simulate"]
@@ -164,18 +164,80 @@ class NodeSimulator:
         self._live: dict[str, _Live] = {}
         self._done: list[RequestMetrics] = []
         self._prev_active: list[str] = []
+        self.alive = True                      # cleared by kill()
+        self._adopted: list[tuple[float, _Live]] = []  # migrated in-flight
 
     # ----------------------------------------------------------- feeding
 
     @property
     def busy(self) -> bool:
         """True while this node still has admitted or pending work."""
-        return self._next < len(self._pending) or bool(self._live)
+        return self.alive and (self._next < len(self._pending)
+                               or bool(self._live) or bool(self._adopted))
 
     def push(self, r: SimRequest) -> None:
         """Feed one arrival (callers must push in arrival order — the
         cluster loop routes at global arrival times, so this holds)."""
+        if not self.alive:
+            raise RuntimeError(f"node {self.node_id} is dead")
         self._pending.append(r)
+
+    # ------------------------------------------------------------- faults
+
+    def slow_down(self, factor: float) -> None:
+        """Degrade (or, factor < 1, upgrade) this node's service rate by
+        a constant factor — the injected slow-node fault.  Applied as a
+        ``ScaledServiceModel`` wrapper so every analytic time the
+        event-compressed fast-forward relies on stays consistent."""
+        self.model = ScaledServiceModel(spec=self.model.spec,
+                                        factor=factor * getattr(
+                                            self.model, "factor", 1.0))
+
+    def kill(self, t: float) -> list[_Live]:
+        """Fail this node at time ``t``.  Every in-flight request is
+        withdrawn from the (possibly cluster-shared) scheduler — its
+        BatchState row is removed, so no ``node_id`` row dangles — and
+        returned, along with still-pending routed arrivals, for the
+        cluster loop to re-route or abort.  Host-resident swap payloads
+        survive the node (the orphan stays ``swapped`` and pays swap-in
+        on its new node); device-resident KV dies with it (the orphan
+        re-prefills, keeping the tokens already streamed out).  A dead
+        node accepts no further work and reports not busy."""
+        self.now = max(self.now, t)
+        self.alive = False
+        orphans: list[_Live] = []
+        for rid, lv in list(self._live.items()):
+            self.scheduler.on_abort(rid)   # drops the row, releases the
+            if not lv.swapped:             # router's placement accounting
+                lv.prefilled = False       # device KV lost: re-prefill
+                lv.prefill_done = 0
+                lv.resident_kv = 0
+            lv.metrics.n_preemptions += 1
+            orphans.append(lv)
+        self._live.clear()
+        for r in self._pending[self._next:]:
+            self.scheduler.on_abort(r.request_id)  # router release only
+            orphans.append(_Live(req=r, metrics=RequestMetrics(
+                request_id=r.request_id, dataset=r.dataset,
+                arrival=r.arrival, input_len=r.input_len,
+                output_len=r.true_output_len, node_id=self.node_id)))
+        del self._pending[self._next:]
+        for _, lv in self._adopted:
+            self.scheduler.on_abort(lv.req.request_id)
+            orphans.append(lv)
+        self._adopted.clear()
+        self._prev_active = []
+        return orphans
+
+    def adopt(self, lv: _Live, t: float) -> None:
+        """Accept a re-routed in-flight request from a failed node; it is
+        re-admitted into this node's scheduler (view) once the local
+        clock reaches ``t``, carrying its original arrival stamp and any
+        progress already made."""
+        if not self.alive:
+            raise RuntimeError(f"node {self.node_id} is dead")
+        lv.metrics.node_id = self.node_id
+        self._adopted.append((float(t), lv))
 
     # ------------------------------------------------------------- round
 
@@ -189,20 +251,36 @@ class NodeSimulator:
         while (hi < len(self._pending)
                and self._pending[hi].arrival <= self.now + 1e-12):
             hi += 1
-        if hi == lo:
-            return
-        self._next = hi
-        due = self._pending[lo:hi]
-        self.scheduler.admit_batch(
-            [r.request_id for r in due], [r.prompt for r in due],
-            [r.input_len for r in due], arrivals=[r.arrival for r in due])
-        for r in due:
-            self._live[r.request_id] = _Live(
-                req=r,
-                metrics=RequestMetrics(
-                    request_id=r.request_id, dataset=r.dataset,
-                    arrival=r.arrival, input_len=r.input_len,
-                    output_len=r.true_output_len, node_id=self.node_id))
+        if hi > lo:
+            self._next = hi
+            due = self._pending[lo:hi]
+            self.scheduler.admit_batch(
+                [r.request_id for r in due], [r.prompt for r in due],
+                [r.input_len for r in due],
+                arrivals=[r.arrival for r in due])
+            for r in due:
+                self._live[r.request_id] = _Live(
+                    req=r,
+                    metrics=RequestMetrics(
+                        request_id=r.request_id, dataset=r.dataset,
+                        arrival=r.arrival, input_len=r.input_len,
+                        output_len=r.true_output_len, node_id=self.node_id))
+        if self._adopted:
+            # migrated in-flight requests re-enter once their handover
+            # time is reached, keeping original arrivals and progress
+            due_ad = [lv for ta, lv in self._adopted
+                      if ta <= self.now + 1e-12]
+            if due_ad:
+                self._adopted = [(ta, lv) for ta, lv in self._adopted
+                                 if ta > self.now + 1e-12]
+                for lv in due_ad:
+                    r = lv.req
+                    self.scheduler.admit(r.request_id, r.prompt,
+                                         r.input_len, arrival=r.arrival)
+                    if lv.generated:
+                        self.scheduler.on_progress(r.request_id,
+                                                   lv.generated)
+                    self._live[r.request_id] = lv
 
     def _select_active(self, prev_active: list[str]) -> list[str]:
         """Greedy admission in scheduler-priority order under the KV
@@ -240,14 +318,19 @@ class NodeSimulator:
         Decode fast-forward is capped at the node's own next pending
         arrival *and* at ``horizon`` (the next cluster-global arrival —
         a routing decision this node must not simulate past)."""
+        if not self.alive:
+            return
         live = self._live
         cap = self._cap
         self._admit_arrivals()
         self.scheduler.set_now(self.now)
         if not live:
-            if self._next < len(self._pending):
-                # idle: jump to the next pending arrival
-                self.now = max(self.now, self._pending[self._next].arrival)
+            # idle: jump to the next pending arrival / adoption handover
+            nxt = [self._pending[self._next].arrival] \
+                if self._next < len(self._pending) else []
+            nxt += [ta for ta, _ in self._adopted]
+            if nxt:
+                self.now = max(self.now, min(nxt))
             return
 
         prev_active = self._prev_active
@@ -298,9 +381,11 @@ class NodeSimulator:
                 self.n_iterations += 1
                 if lv.prefill_done >= lv.req.input_len:
                     lv.prefilled = True
-                    lv.generated = 1  # prefill emits the first token
+                    if lv.generated == 0:   # a migrated request re-
+                        lv.generated = 1    # prefills but keeps its
+                        lv.metrics.ttft = (self.now + iter_time  # progress
+                                           - lv.req.arrival)     # and ttft
                     lv.resident_kv = lv.kv_if_resident
-                    lv.metrics.ttft = self.now + iter_time - lv.req.arrival
                     self.scheduler.on_progress(rid, lv.generated)
         else:
             for rid in active:
@@ -309,9 +394,11 @@ class NodeSimulator:
                     iter_time += self.model.prefill_time(lv.req.input_len)
                     lv.prefilled = True
                     lv.prefill_done = lv.req.input_len
-                    lv.generated = 1  # prefill emits the first output token
+                    if lv.generated == 0:   # see chunked branch: migrated
+                        lv.generated = 1    # requests keep progress/ttft
+                        lv.metrics.ttft = (self.now + iter_time
+                                           - lv.req.arrival)
                     lv.resident_kv = lv.kv_if_resident
-                    lv.metrics.ttft = self.now + iter_time - lv.req.arrival
                     self.n_iterations += 1
                     self.scheduler.on_progress(rid, lv.generated)
 

@@ -171,14 +171,29 @@ class SimRequest:
 
 
 def generate_workload(profiles: list[DatasetProfile], n_requests: int,
-                      rps: float, seed: int = 0) -> list[SimRequest]:
+                      rps: float, seed: int = 0, *,
+                      burst_factor: float = 1.0,
+                      burst_period_s: float = 10.0,
+                      burst_duty: float = 0.2) -> list[SimRequest]:
     """Poisson arrivals at ``rps``; each request uniformly picks a dataset
-    profile then a cluster (mixed-dataset experiment when len(profiles)>1)."""
+    profile then a cluster (mixed-dataset experiment when len(profiles)>1).
+
+    ``burst_factor > 1`` modulates the Poisson rate: for the first
+    ``burst_duty`` fraction of every ``burst_period_s`` window the rate
+    is ``burst_factor * rps`` — the flash-crowd overload pattern the
+    gateway's admission control is tested against.  ``burst_factor=1``
+    (default) draws the exact same RNG sequence as the unmodulated
+    generator, so every seeded workload in existing experiments is
+    unchanged."""
     rng = np.random.default_rng(seed)
     t = 0.0
     out: list[SimRequest] = []
     for i in range(n_requests):
-        t += float(rng.exponential(1.0 / rps))
+        rate = rps
+        if burst_factor != 1.0 and (t % burst_period_s
+                                    ) < burst_duty * burst_period_s:
+            rate = rps * burst_factor
+        t += float(rng.exponential(1.0 / rate))
         prof = profiles[int(rng.integers(len(profiles)))]
         cluster = prof.clusters[int(rng.integers(len(prof.clusters)))]
         out.append(SimRequest(

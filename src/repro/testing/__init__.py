@@ -1,0 +1,11 @@
+"""Reusable fault-injection + invariant-checking harness (repro.testing).
+
+Everything here is production-importable (no pytest dependency): the
+benchmark harness drives the same fault matrix CI asserts on.
+"""
+
+from .faults import (FlakyPredictor, KVFaultError, PredictorUnavailable,
+                     VirtualClock, assert_engine_quiesced, inject_kv_fault)
+
+__all__ = ["FlakyPredictor", "KVFaultError", "PredictorUnavailable",
+           "VirtualClock", "assert_engine_quiesced", "inject_kv_fault"]

@@ -1,0 +1,323 @@
+"""Fault-injection matrix (ISSUE 6): abort in every lifecycle state leaks
+nothing, injected KV/predictor faults are survived with conserved block
+accounting, node kill/slow events re-route cleanly, stall diagnostics."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        SemanticHistoryPredictor, make_policy)
+from repro.models import build_model
+from repro.serving import (EngineStallError, RequestState, ServeRequest,
+                           ServingEngine)
+from repro.simulator import (NodeKill, NodeSlow, generate_workload,
+                             make_profile, simulate_cluster)
+from repro.testing import (FlakyPredictor, PredictorUnavailable, VirtualClock,
+                           assert_engine_quiesced, inject_kv_fault)
+
+CFG = get_config("llama3.2-1b", reduced=True)
+
+
+def _engine(n_slots=2, predictor=None, policy="fcfs", **kw):
+    sched = (Scheduler(policy=make_policy(policy), predictor=predictor)
+             if predictor is not None
+             else Scheduler(policy=make_policy(policy)))
+    return ServingEngine(model=build_model(CFG), scheduler=sched,
+                         n_slots=n_slots, max_seq_len=96, seed=0,
+                         clock=VirtualClock(), **kw)
+
+
+def _req(i, prompt="p", max_new=6, n_prompt=6, **kw):
+    rng = np.random.default_rng(i)
+    toks = [int(t) for t in rng.integers(3, CFG.vocab_size, n_prompt)]
+    return ServeRequest(request_id=f"f{i}", prompt=prompt,
+                        prompt_tokens=toks, max_new_tokens=max_new,
+                        eos_token=0, **kw)
+
+
+def _swap_engine():
+    """Tight-capacity swap-mode engine stepped until some request is
+    observably parked in SWAPPED state (capacity-forced preemption)."""
+    o = OraclePredictor()
+    for i in range(6):
+        o.register(f"p{i}", LengthDistribution(np.array([8 + 3 * i]),
+                                               np.array([1.0])))
+    eng = ServingEngine(
+        model=build_model(CFG),
+        scheduler=Scheduler(policy=make_policy("sagesched"), predictor=o),
+        n_slots=2, max_seq_len=96, capacity_tokens=56, block_size=8,
+        preemption_mode="swap", seed=0, clock=VirtualClock())
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(6):
+        toks = [int(t) for t in rng.integers(3, CFG.vocab_size,
+                                             int(rng.integers(6, 14)))]
+        reqs.append(ServeRequest(
+            request_id=f"f{i}", prompt=f"p{i}", prompt_tokens=toks,
+            max_new_tokens=8 + 3 * i, eos_token=1, arrival=float(i) * 1e-3))
+    eng.submit_batch(reqs)
+    swapped = None
+    for _ in range(200):
+        eng.step()
+        swapped = next((r for r in reqs
+                        if r.state == RequestState.SWAPPED), None)
+        if swapped is not None:
+            break
+    assert swapped is not None, "scenario must park a request in SWAPPED"
+    return eng, swapped, reqs
+
+
+# --------------------------------------- satellite 1: abort leaks nothing
+
+def test_abort_waiting_request_releases_everything():
+    eng = _engine(n_slots=1)
+    reqs = [_req(i, max_new=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    assert all(r.state == RequestState.WAITING for r in reqs)
+    eng.abort("f2", reason="client_cancel")
+    assert reqs[2].state == RequestState.ABORTED
+    assert reqs[2].finish_reason == "client_cancel"
+    eng.kv.assert_conserved()
+    eng.run_until_done(max_steps=500)
+    assert_engine_quiesced(eng)
+    assert eng.kv.free_slots == 1 and eng.kv.used_tokens == 0
+
+
+def test_abort_running_request_releases_everything():
+    eng = _engine(n_slots=2)
+    reqs = [_req(i, max_new=32) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert any(r.state == RequestState.RUNNING for r in reqs)
+    running = next(r for r in reqs if r.state == RequestState.RUNNING)
+    eng.abort(running.request_id)
+    eng.kv.assert_conserved()
+    assert not eng.kv.holds(running.request_id)
+    eng.run_until_done(max_steps=2000)
+    assert_engine_quiesced(eng)
+    assert eng.kv.used_tokens == 0 and eng.kv.swapped_tokens == 0
+    assert eng.metrics.aborted == 1
+
+
+def test_abort_swapped_request_releases_host_payload():
+    eng, swapped, reqs = _swap_engine()
+    rid = swapped.request_id
+    assert eng.kv.is_swapped(rid) and eng.kv.swapped_tokens > 0
+    eng.abort(rid, reason="client_cancel")
+    assert not eng.kv.is_swapped(rid)
+    assert eng.metrics.wasted_tokens >= swapped.generated > 0
+    eng.kv.assert_conserved()
+    eng.run_until_done(max_steps=2000)
+    assert all(r.state == RequestState.FINISHED
+               for r in reqs if r is not swapped)
+    assert_engine_quiesced(eng)
+    assert eng.kv.used_tokens == 0 and eng.kv.swapped_tokens == 0
+    assert eng.kv.free_slots == 2
+
+
+def test_abort_mid_chunked_prefill_releases_everything():
+    eng = _engine(n_slots=1, prefill_chunk=4)
+    r = _req(0, max_new=8, n_prompt=14)
+    eng.submit(r)
+    eng.step()
+    assert 0 < r.prefill_pos < len(r.prompt_tokens)   # mid-prefill
+    eng.abort("f0")
+    eng.kv.assert_conserved()
+    assert eng.kv.used_tokens == 0 and eng.kv.free_slots == 1
+    assert r.prefill_pos == 0
+    assert_engine_quiesced(eng)
+
+
+def test_abort_terminal_states_is_idempotent():
+    eng = _engine(n_slots=1)
+    r = _req(0, max_new=4)
+    eng.submit(r)
+    eng.run_until_done(max_steps=500)
+    assert r.state == RequestState.FINISHED
+    before = (eng.metrics.aborted, r.finish_reason)
+    eng.abort("f0")                    # FINISHED: no-op
+    eng.abort("f0")                    # double-abort: no-op
+    assert (eng.metrics.aborted, r.finish_reason) == before
+    eng.kv.assert_conserved()
+
+
+# ------------------------------- satellite 2: stall raises with diagnosis
+
+def test_run_until_done_exhaustion_raises_diagnostic():
+    eng = _engine(n_slots=1)
+    eng.submit(_req(0, max_new=40))
+    with pytest.raises(EngineStallError) as ei:
+        eng.run_until_done(max_steps=1)
+    msg = str(ei.value)
+    assert "step budget (1)" in msg
+    assert "request_states" in msg and "queue_depth" in msg
+    assert "conservation" in msg or "free_blocks" in msg
+    # the engine is still coherent and can finish afterwards
+    eng.run_until_done(max_steps=2000)
+    assert_engine_quiesced(eng)
+
+
+# ------------------------------------------ injected KV-plane faults
+
+def test_swap_in_fault_falls_back_to_recompute():
+    eng, swapped, reqs = _swap_engine()
+    with inject_kv_fault(eng.kv, "swap_in", at_call=0, n_calls=1) as stats:
+        eng.run_until_done(max_steps=2000)
+    assert stats["faults"] == 1
+    assert eng.metrics.swap_in_faults == 1
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert_engine_quiesced(eng)
+
+
+def test_grow_fault_is_absorbed_by_pressure_relief():
+    eng = _engine(n_slots=2)
+    reqs = [_req(i, max_new=24, n_prompt=10) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    with inject_kv_fault(eng.kv, "grow", at_call=2, n_calls=3) as stats:
+        eng.run_until_done(max_steps=4000)
+    assert stats["faults"] >= 1
+    assert_engine_quiesced(eng)
+    assert eng.kv.used_tokens == 0
+
+
+def test_inject_kv_fault_restores_method():
+    eng = _engine(n_slots=1)
+    orig = eng.kv.swap_in
+    with pytest.raises(RuntimeError):
+        with inject_kv_fault(eng.kv, "swap_in"):
+            eng.kv.swap_in("nope")
+    assert eng.kv.swap_in == orig      # bound method re-exposed
+
+
+# ------------------------------------------ predictor faults / degraded
+
+def test_flaky_predictor_modes():
+    inner = OraclePredictor()
+    inner.register("a", LengthDistribution(np.array([10]), np.array([1.0])))
+    inner.register("b", LengthDistribution(np.array([100]), np.array([1.0])))
+    out = FlakyPredictor(inner, mode="outage", fail_after=1)
+    assert out.predict("a", 8).mean == 10.0
+    with pytest.raises(PredictorUnavailable):
+        out.predict("a", 8)
+    corrupt = FlakyPredictor(inner, mode="corrupt", corrupt_scale=16.0)
+    d = corrupt.predict("a", 8)
+    assert d.lengths.tolist() == [160] and corrupt.faults == 1
+    stale = FlakyPredictor(inner, mode="stale", fail_after=1)
+    assert stale.predict("a", 8).mean == 10.0
+    assert stale.predict("b", 8).mean == 10.0   # replays the first answer
+
+
+def test_scheduler_degrades_and_recovers_on_predictor_outage():
+    flaky = FlakyPredictor(SemanticHistoryPredictor(), mode="outage",
+                           fail_after=0, n_failures=1)
+    sched = Scheduler(policy=make_policy("sagesched"), predictor=flaky)
+    # the single outage raises out of the whole batched predict: BOTH
+    # admissions fall back to the prediction-free prior
+    sched.admit_batch(["d0", "d1"], ["p0", "p1"], [8, 8],
+                      arrivals=[0.0, 0.0])
+    assert sched.degraded
+    assert sched.stats["prediction_failures"] == 2
+    assert sched.order(["d0", "d1"])           # still schedulable
+    sched.admit("d2", "p2", 8, arrival=0.1)    # window over: healthy again
+    assert not sched.degraded
+
+
+# --------------------------------------------- cluster node kill / slow
+
+PROFILES = [make_profile("sharegpt", n_clusters=4, seed=1)]
+
+
+def _workload(n=40, rps=10.0, seed=3):
+    return generate_workload(PROFILES, n, rps=rps, seed=seed)
+
+
+def test_cluster_without_faults_is_bit_identical():
+    reqs = _workload()
+    a = simulate_cluster(reqs, lambda: Scheduler(), 3)
+    b = simulate_cluster(reqs, lambda: Scheduler(), 3, faults=[])
+    ka = sorted((m.request_id, m.ttft, m.ttlt, m.node_id)
+                for m in a.metrics)
+    kb = sorted((m.request_id, m.ttft, m.ttlt, m.node_id)
+                for m in b.metrics)
+    assert ka == kb and b.migrated == 0 and b.aborted == []
+
+
+def test_cluster_node_kill_reroutes_without_dangling_rows():
+    reqs = _workload()
+    created = []
+
+    def factory():
+        created.append(Scheduler())
+        return created[-1]
+
+    res = simulate_cluster(reqs, factory, 3, faults=[NodeKill(1, at=1.0)])
+    accounted = {m.request_id for m in res.metrics} | set(res.aborted)
+    assert accounted == {r.request_id for r in reqs}
+    assert res.migrated > 0 and res.aborted == []
+    # shared BatchState fully drained: no node_id row dangles post-kill
+    assert len(created) == 1 and len(created[0]) == 0
+    # the dead node completed nothing after the kill instant
+    for m in res.node_results[1].metrics:
+        assert m.arrival + m.ttlt <= 1.0 + 1e-9
+    # migrated requests landed on surviving nodes
+    assert all(m.node_id != 1 for m in res.metrics
+               if m.arrival + m.ttlt > 1.0 + 1e-9)
+
+
+def test_cluster_node_kill_cost_router_parity_of_accounting():
+    reqs = _workload()
+    for shared in (True, False):
+        res = simulate_cluster(reqs, lambda: Scheduler(), 3, router="cost",
+                               shared_state=shared,
+                               faults=[NodeKill(2, at=1.2)])
+        accounted = {m.request_id for m in res.metrics} | set(res.aborted)
+        assert accounted == {r.request_id for r in reqs}
+
+
+def test_cluster_slow_node_degrades_latency():
+    reqs = _workload()
+    base = simulate_cluster(reqs, lambda: Scheduler(), 2)
+    slow = simulate_cluster(reqs, lambda: Scheduler(), 2,
+                            faults=[NodeSlow(0, at=0.5, factor=8.0)])
+    assert len(slow.metrics) == len(base.metrics)
+    assert slow.mean_ttlt > base.mean_ttlt
+
+
+def test_cluster_total_outage_aborts_everything():
+    reqs = _workload(n=20)
+    res = simulate_cluster(reqs, lambda: Scheduler(), 2,
+                           faults=[NodeKill(0, at=0.4), NodeKill(1, at=0.5)])
+    assert set(res.aborted) | {m.request_id for m in res.metrics} \
+        == {r.request_id for r in reqs}
+    assert len(res.aborted) > 0
+
+
+# ----------------------------------------------- workload burst overload
+
+def test_workload_burst_factor_one_is_seed_identical():
+    a = generate_workload(PROFILES, 50, rps=5.0, seed=7)
+    b = generate_workload(PROFILES, 50, rps=5.0, seed=7, burst_factor=1.0)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+
+
+def test_workload_bursts_compress_arrivals():
+    base = generate_workload(PROFILES, 200, rps=5.0, seed=7)
+    burst = generate_workload(PROFILES, 200, rps=5.0, seed=7,
+                              burst_factor=10.0, burst_period_s=10.0,
+                              burst_duty=0.5)
+    assert burst[-1].arrival < base[-1].arrival  # same n arrives sooner
+
+
+# ------------------------------------------------------------- clock
+
+def test_virtual_clock_is_monotonic():
+    clk = VirtualClock(start=2.0)
+    assert clk() == 2.0
+    assert clk.advance(0.5) == 2.5
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)

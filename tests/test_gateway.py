@@ -1,0 +1,217 @@
+"""Gateway admission control: verdicts, bounded queues, uncertainty-aware
+shedding, deadlines, retries, degraded fallback (ISSUE 6 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        SemanticHistoryPredictor, make_policy)
+from repro.models import build_model
+from repro.serving import (Gateway, GatewayConfig, RequestState, ServeRequest,
+                           ServingEngine, Verdict)
+from repro.testing import FlakyPredictor, VirtualClock, assert_engine_quiesced
+
+CFG = get_config("llama3.2-1b", reduced=True)
+
+
+def _engine(n_slots=2, predictor=None, policy="fcfs", **kw):
+    sched = (Scheduler(policy=make_policy(policy), predictor=predictor)
+             if predictor is not None
+             else Scheduler(policy=make_policy(policy)))
+    return ServingEngine(model=build_model(CFG), scheduler=sched,
+                         n_slots=n_slots, max_seq_len=96, seed=0,
+                         clock=VirtualClock(), **kw)
+
+
+def _req(i, prompt="p", max_new=6, n_prompt=6, **kw):
+    rng = np.random.default_rng(i)
+    toks = [int(t) for t in rng.integers(3, CFG.vocab_size, n_prompt)]
+    return ServeRequest(request_id=f"g{i}", prompt=prompt,
+                        prompt_tokens=toks, max_new_tokens=max_new,
+                        eos_token=0, **kw)
+
+
+def test_gateway_verdicts_and_bounded_queues():
+    eng = _engine(n_slots=1)
+    gw = Gateway(eng, GatewayConfig(max_inflight=2, max_queue_per_tenant=2,
+                                    max_total_queue=2, max_retries=0,
+                                    shed_policy="tail"))
+    verdicts = gw.offer_batch([_req(i) for i in range(6)])
+    assert verdicts == [Verdict.ACCEPT, Verdict.ACCEPT, Verdict.QUEUE,
+                        Verdict.QUEUE, Verdict.SHED, Verdict.SHED]
+    assert eng.metrics.shed == 2
+    gw.run_until_drained(max_steps=2000)
+    gw.assert_all_terminal()
+    kinds = sorted(k for k, _ in gw.dispositions.values())
+    assert kinds == ["FINISHED"] * 4 + ["SHED"] * 2
+    assert all(reason == "queue_full" for k, reason in
+               gw.dispositions.values() if k == "SHED")
+    assert_engine_quiesced(eng)
+
+
+def test_gateway_round_robin_protects_tenants():
+    """One tenant's flood cannot consume another tenant's queue space,
+    and the round-robin pump serves the minority tenant early."""
+    eng = _engine(n_slots=1)
+    gw = Gateway(eng, GatewayConfig(max_inflight=1, max_queue_per_tenant=4,
+                                    max_total_queue=16, max_retries=0,
+                                    shed_policy="tail"))
+    flood = [_req(i, tenant="a") for i in range(6)]
+    va = gw.offer_batch(flood)
+    assert va == [Verdict.ACCEPT] + [Verdict.QUEUE] * 4 + [Verdict.SHED]
+    vb = gw.offer(_req(10, tenant="b"))
+    assert vb == Verdict.QUEUE        # per-tenant bound, not global, applies
+    finish_order = []
+    while not gw.drained:
+        gw.step()
+        for r in flood + [gw._offered["g10"]]:
+            if r.state == RequestState.FINISHED \
+                    and r.request_id not in finish_order:
+                finish_order.append(r.request_id)
+    # the minority tenant's request is pumped in the first round-robin
+    # turn after the flood's head — not behind the whole flood
+    assert finish_order.index("g10") <= 2
+    gw.assert_all_terminal()
+
+
+def test_gateway_cost_shedding_drops_widest_tail():
+    """Under pressure the cost policy sheds the request whose predicted
+    cost upper quantile is worst — a queued heavy-tail request is
+    displaced by a cheaper incoming one."""
+    o = OraclePredictor()
+    o.register("cheap", LengthDistribution(np.array([4]), np.array([1.0])))
+    o.register("wide", LengthDistribution(np.array([4, 400]),
+                                          np.array([0.5, 0.5])))
+    eng = _engine(n_slots=1, predictor=o, policy="ssjf")
+    gw = Gateway(eng, GatewayConfig(max_inflight=1, max_queue_per_tenant=1,
+                                    max_total_queue=1, max_retries=0,
+                                    shed_policy="cost", shed_quantile=0.9))
+    v0 = gw.offer(_req(0, prompt="cheap"))
+    v1 = gw.offer(_req(1, prompt="wide", max_new=8))
+    v2 = gw.offer(_req(2, prompt="cheap"))
+    assert (v0, v1, v2) == (Verdict.ACCEPT, Verdict.QUEUE, Verdict.QUEUE)
+    assert gw.dispositions["g1"] == ("SHED", "displaced_by_cheaper")
+    assert eng.metrics.shed == 1
+    gw.run_until_drained(max_steps=2000)
+    gw.assert_all_terminal()
+    assert gw.dispositions["g0"][0] == "FINISHED"
+    assert gw.dispositions["g2"][0] == "FINISHED"
+
+
+def test_gateway_degraded_mode_falls_back_to_static_limits():
+    """Predictor outage: scheduler flips to the flat prediction-free
+    prior, the gateway stops ranking on costs (FCFS tail-drop) and caps
+    in-flight at the conservative static limit — nothing crashes and
+    every request still terminates with a reason."""
+    flaky = FlakyPredictor(SemanticHistoryPredictor(), mode="outage")
+    eng = _engine(n_slots=2, predictor=flaky, policy="sagesched")
+    gw = Gateway(eng, GatewayConfig(max_inflight=8, degraded_max_inflight=2,
+                                    max_queue_per_tenant=4,
+                                    max_total_queue=4, max_retries=0,
+                                    shed_policy="cost"))
+    verdicts = gw.offer_batch([_req(i) for i in range(8)])
+    assert gw.degraded and eng.scheduler.degraded
+    assert eng.scheduler.stats["prediction_failures"] > 0
+    # static degraded limit (2), then bounded queue (4), then tail-drop
+    assert verdicts.count(Verdict.ACCEPT) == 2
+    assert verdicts.count(Verdict.QUEUE) == 4
+    assert verdicts.count(Verdict.SHED) == 2
+    gw.run_until_drained(max_steps=4000)
+    gw.assert_all_terminal()
+    assert_engine_quiesced(eng)
+
+
+def test_gateway_deadline_aborts_release_every_block():
+    clock = VirtualClock()
+    eng = ServingEngine(model=build_model(CFG),
+                        scheduler=Scheduler(policy=make_policy("fcfs")),
+                        n_slots=2, max_seq_len=96, seed=0, clock=clock)
+    gw = Gateway(eng, GatewayConfig(max_inflight=2))
+    r0 = _req(0, max_new=64, ttlt_deadline_s=0.5)   # will miss TTLT
+    r1 = _req(1, max_new=64, ttft_deadline_s=0.25)  # aborted before decode
+    assert gw.offer_batch([r0, r1]) == [Verdict.ACCEPT, Verdict.ACCEPT]
+    clock.advance(0.3)             # past r1's TTFT budget, within r0's TTLT
+    gw.tick()
+    assert r1.state == RequestState.ABORTED
+    assert r1.finish_reason == "ttft_deadline"
+    gw.step()                      # r0 starts decoding; tokens stream
+    clock.advance(0.7)
+    gw.tick()
+    assert r0.state == RequestState.ABORTED
+    assert r0.finish_reason == "ttlt_deadline"
+    assert eng.metrics.timeout_aborts == 2
+    assert eng.metrics.wasted_tokens == r0.generated + r1.generated
+    eng.kv.assert_conserved()
+    assert eng.kv.free_slots == 2 and eng.kv.used_tokens == 0
+    gw.assert_all_terminal()
+    s = eng.metrics.summary([r0, r1])
+    assert s["timeout_aborts"] == 2
+    assert s["goodput_tokens"] == eng.metrics.decode_tokens \
+        - s["wasted_tokens"]
+
+
+def test_gateway_queued_deadline_shed_without_engine_work():
+    clock = VirtualClock(start=5.0)
+    eng = ServingEngine(model=build_model(CFG),
+                        scheduler=Scheduler(policy=make_policy("fcfs")),
+                        n_slots=1, max_seq_len=96, seed=0, clock=clock)
+    gw = Gateway(eng, GatewayConfig(max_inflight=1))
+    r0 = _req(0, max_new=32)
+    r1 = _req(1, max_new=8, arrival=clock(), ttlt_deadline_s=0.2)
+    assert gw.offer_batch([r0, r1]) == [Verdict.ACCEPT, Verdict.QUEUE]
+    clock.advance(1.0)
+    gw.tick()
+    assert gw.dispositions["g1"] == ("SHED", "deadline")
+    assert r1.state == RequestState.SHED
+    gw.run_until_drained(max_steps=2000)
+    gw.assert_all_terminal()
+
+
+def test_gateway_retry_backoff_eventually_admits():
+    """A shed request retries with exponential backoff and is admitted
+    once pressure clears (no queue space at all -> pure retry path)."""
+    eng = _engine(n_slots=1)
+    gw = Gateway(eng, GatewayConfig(max_inflight=1, max_queue_per_tenant=0,
+                                    max_total_queue=0, max_retries=3,
+                                    retry_backoff_s=0.1, shed_policy="tail"))
+    r0, r1 = _req(0, max_new=4), _req(1, max_new=4)
+    assert gw.offer_batch([r0, r1]) == [Verdict.ACCEPT, Verdict.SHED]
+    assert not gw.dispositions.get("g1")      # retryable, not terminal yet
+    gw.run_until_drained(max_steps=2000)
+    gw.assert_all_terminal()
+    assert gw.dispositions["g1"][0] == "FINISHED"
+    assert eng.metrics.retries >= 1
+    assert eng.metrics.shed == 0
+
+
+def test_gateway_retry_exhaustion_is_terminal_shed():
+    eng = _engine(n_slots=1)
+    gw = Gateway(eng, GatewayConfig(max_inflight=1, max_queue_per_tenant=0,
+                                    max_total_queue=0, max_retries=2,
+                                    retry_backoff_s=0.05, shed_policy="tail"))
+    r0 = _req(0, max_new=64)                  # hogs the engine
+    r1 = _req(1, max_new=4)
+    gw.offer_batch([r0, r1])
+    # drive retries while r0 still occupies the single in-flight slot:
+    # tick (not step) so the engine makes no progress
+    clock = gw.clock
+    for _ in range(8):
+        clock.advance(0.5)
+        gw.tick()
+        if gw.dispositions.get("g1"):
+            break
+    assert gw.dispositions["g1"] == ("SHED", "queue_full")
+    assert r1.state == RequestState.SHED
+    assert eng.metrics.retries == 2 and eng.metrics.shed == 1
+    gw.run_until_drained(max_steps=2000)
+    gw.assert_all_terminal()
+
+
+def test_gateway_duplicate_offer_rejected():
+    eng = _engine(n_slots=1)
+    gw = Gateway(eng)
+    r = _req(0)
+    gw.offer(r)
+    with pytest.raises(KeyError):
+        gw.offer(r)
