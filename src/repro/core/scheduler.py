@@ -783,7 +783,14 @@ class Scheduler:
         that IO on readmission.  Shared by the real engine and the
         simulator so both layers evict under ONE preemption cost model.
 
-        held_tokens: mapping rid -> resident KV tokens;
+        held_tokens: mapping rid -> resident KV tokens the eviction
+        would actually free.  Under copy-on-write prefix sharing the
+        engine passes *owned* (refcount-weighted) tokens —
+        ``KVCacheManager.owned_tokens_of`` — so a request holding a
+        widely shared prefix ranks as a cheap-to-keep victim: evicting
+        it frees almost nothing.  Fractional values are fine (the math
+        below is float throughout); for private allocations owned ==
+        block-aligned held tokens and the ranking is unchanged.
         swap_cost: callable tokens -> predicted restore cost (e.g.
         ``ServiceModel.swap_time``); None falls back to held tokens
         (∝ KV bytes) as the proxy — swap_time is affine in bytes, so

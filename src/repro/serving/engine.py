@@ -52,6 +52,7 @@ lowers for the production mesh).
 from __future__ import annotations
 
 import functools
+import math
 import time
 import zlib
 from collections import Counter
@@ -114,6 +115,13 @@ class ServingEngine:
     service_model: ServiceModel | None = None
     step_mode: str = "fused"               # "fused" | "orchestrated"
     decode_steps: int = 1                  # decode tokens per host round-trip
+    # Copy-on-write prefix sharing: admission matches an incoming
+    # prompt's longest indexed block-chain prefix and adopts those KV
+    # pages by refcount instead of re-prefilling them (chunked prefill
+    # resumes at the divergence point).  Requires chunked prefill
+    # (prefill_chunk set + a family that supports it) — silently inert
+    # otherwise, so enabling it on an SSM family changes nothing.
+    prefix_sharing: bool = False
     # Injectable time source (TTFT/TTLT stamps, arrival defaults).  The
     # gateway's deadline enforcement shares this clock, so tests and
     # benchmarks drive deadline storms deterministically with a virtual
@@ -363,12 +371,15 @@ class ServingEngine:
     def _restore_payload(self, r: ServeRequest, payload: dict) -> None:
         slot = r.slot
         blocks = self.kv.block_table(r.request_id)
-        if self._has_kv:
-            idx = jnp.asarray(blocks)
+        # leading blocks re-adopted from the prefix index at swap_in
+        # already hold this prefix's KV on device — scatter only the rest
+        skip = self.kv.adopted_blocks_of(r.request_id)
+        if self._has_kv and len(blocks) > skip:
+            idx = jnp.asarray(blocks[skip:])
             self._cache["k"] = self._cache["k"].at[:, idx].set(
-                jnp.asarray(payload["k"]))
+                jnp.asarray(payload["k"])[:, skip:])
             self._cache["v"] = self._cache["v"].at[:, idx].set(
-                jnp.asarray(payload["v"]))
+                jnp.asarray(payload["v"])[:, skip:])
         if "ssm" in self._cache:
             self._cache["ssm"] = jax.tree.map(
                 lambda big, small: big.at[:, slot].set(jnp.asarray(small)),
@@ -419,13 +430,24 @@ class ServingEngine:
         else:
             order = self.scheduler.order(live, running=running,
                                          pin_running=True)
-        selected, used_blocks = [], 0
+        selected, used_blocks = [], 0.0
         budget = self.kv.budget_blocks
         for rid in order:
             if len(selected) >= self.n_slots:
                 break
-            need = self.kv.blocks_for(
-                self._requests[rid].context_len + 1)
+            need = float(self.kv.blocks_for(
+                self._requests[rid].context_len + 1))
+            if self.kv.holds(rid):
+                # resident: charge owned (refcount-weighted) blocks, so
+                # N requests sharing a prefix pay for it once, not N
+                # times (identical to raw held blocks when private)
+                need -= self.kv.shared_excess_blocks(rid)
+            elif self._sharing:
+                # waiting: discount the blocks a prefix match would
+                # adopt (kept >= 1 so every request charges something)
+                m, _, _ = self.kv.match_prefix(
+                    self._requests[rid].prompt_tokens)
+                need -= min(m // self.block_size, need - 1)
             if used_blocks + need <= budget:
                 selected.append(rid)
                 used_blocks += need
@@ -437,6 +459,40 @@ class ServingEngine:
         return selected
 
     # --------------------------------------------------------------- admit
+
+    @property
+    def _sharing(self) -> bool:
+        """Prefix sharing is live only when the family can resume a
+        prefill mid-context (chunked prefill) through the paged KV pool.
+        Recurrent-state families cannot start at a divergence point, so
+        the flag is inert for them — tokens never change either way."""
+        return (self.prefix_sharing and self._has_kv
+                and self.model.supports_chunked_prefill
+                and self.prefill_chunk is not None)
+
+    def _match_prompt(self, r: ServeRequest) -> tuple[int, list[int],
+                                                      list[int]]:
+        """Longest adoptable shared-block prefix of ``r``'s prompt,
+        capped twice: (a) strictly below the last context position — the
+        decode path re-emits from ``context_len - 1`` (see
+        ``_finalize_prefill``'s rewind), so the block holding it must be
+        private, which also makes runtime copy-on-write forks
+        unnecessary in the engine (the cap IS the fork point, taken
+        before any divergent write exists); (b) down to the prefill
+        chunk grid, so the remaining chunks land on exactly the
+        boundaries a from-scratch prefill would use and the computed KV
+        (and therefore every sampled token) is bit-identical to the
+        sharing-off run."""
+        if not self._sharing:
+            return 0, [], []
+        matched, blocks, hashes = self.kv.match_prefix(r.prompt_tokens)
+        if not matched:
+            return 0, [], []
+        grid = self.prefill_chunk * self.block_size \
+            // math.gcd(self.prefill_chunk, self.block_size)
+        m = (min(matched, r.context_len - 1) // grid) * grid
+        k = m // self.block_size
+        return m, blocks[:k], hashes[:k]
 
     def _admit(self, r: ServeRequest) -> None:
         rid = r.request_id
@@ -460,9 +516,15 @@ class ServingEngine:
                 return
         self.kv.drop_swapped(rid)
         ctx_len = r.context_len      # replay prompt + outputs on recompute
-        slot = self.kv.allocate(rid, ctx_len)
+        matched, shared, hashes = self._match_prompt(r)
+        if matched:
+            slot = self.kv.allocate_shared(rid, ctx_len, shared, hashes)
+            r.prefill_pos = matched  # chunks resume at the divergence point
+            self.metrics.prefill_tokens_reused += matched
+        else:
+            slot = self.kv.allocate(rid, ctx_len)
+            r.prefill_pos = 0
         self._bind_slot(r, slot)
-        r.prefill_pos = 0
         self._cache_len[slot] = -1   # not decode-ready until prefilled
 
     def _restore_swapped(self, r: ServeRequest, slot: int,
@@ -512,7 +574,12 @@ class ServingEngine:
         self._cache_len[r.slot] = len(ctx) - 1
         self._last_token[r.slot] = ctx[-1]
         self.metrics.prefills += 1
-        self.metrics.prefill_tokens += len(ctx)
+        # publish this prompt's full blocks for later prompts to adopt
+        # (first writer wins; positions at/after the rewind point above
+        # are never published — the manager excludes the last prompt
+        # position's block)
+        if self._sharing:
+            self.kv.register_prefix(r.request_id, r.prompt_tokens)
 
     def _prefill_chunk_step(self, r: ServeRequest, take: int) -> None:
         """Advance one Sarathi chunk: run [prefill_pos, prefill_pos+take)
@@ -538,6 +605,7 @@ class ServingEngine:
             self._cache["k"], self._cache["v"], k_c, v_c, out_idx)
         r.prefill_pos = s1
         self.metrics.prefill_chunks += 1
+        self.metrics.prefill_tokens += take  # tokens actually computed
         if s1 >= len(ctx):
             self._finalize_prefill(r, ctx)
 
@@ -571,6 +639,7 @@ class ServingEngine:
                 self._cache["ssm"], cache["ssm"])
         r.prefill_pos = len(ctx)
         self.metrics.prefill_chunks += 1
+        self.metrics.prefill_tokens += len(ctx)
         self._finalize_prefill(r, ctx)
 
     def _run_prefills(self) -> None:
@@ -639,7 +708,11 @@ class ServingEngine:
                 break
             victims = self.scheduler.eviction_order(
                 candidates,
-                held_tokens={x: self.kv.tokens_of(x) for x in candidates},
+                # owned (refcount-weighted) tokens: a heavy sharer frees
+                # little real memory when evicted, so it ranks cheap to
+                # keep; equals block-aligned held tokens when private
+                held_tokens={x: self.kv.owned_tokens_of(x)
+                             for x in candidates},
                 swap_cost=lambda t: self.service_model.swap_time(
                     t, self.kv.block_size),
                 memory_weight=self.memory_weight)

@@ -24,6 +24,9 @@ class EngineMetrics:
     prefills: int = 0            # completed prefill passes (swap-ins skip)
     prefill_chunks: int = 0      # chunk forwards run (== prefills if atomic)
     prefill_tokens: int = 0      # true (unpadded) prompt tokens prefilled
+    prefill_tokens_reused: int = 0  # prompt tokens adopted from the prefix
+                                 # index instead of being re-prefilled
+                                 # (copy-on-write sharing; 0 when off)
     decode_iterations: int = 0   # device decode forwards executed
     decode_tokens: int = 0       # tokens actually sampled (masked lanes
                                  # and post-finish fori_loop steps excluded)
@@ -87,6 +90,8 @@ class EngineMetrics:
             "mean_output_len": float(gen.mean()),
             "prefills": self.prefills,
             "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_reused": self.prefill_tokens_reused,
             "decode_iterations": self.decode_iterations,
             "decode_tokens": self.decode_tokens,
             "fused_steps": self.fused_steps,

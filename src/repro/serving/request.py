@@ -33,6 +33,11 @@ class ServeRequest:
     ttft_deadline_s: float | None = None
     ttlt_deadline_s: float | None = None
     tenant: str = "default"           # gateway per-tenant queue key
+    session_id: str = ""              # multi-turn chain key ("" = one-shot);
+                                      # turns of one session share a growing
+                                      # prompt prefix the engine's prefix
+                                      # index can adopt instead of re-
+                                      # prefilling
 
     state: RequestState = RequestState.WAITING
     output_tokens: list[int] = field(default_factory=list)

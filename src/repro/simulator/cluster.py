@@ -488,7 +488,8 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
                      n_nodes: int, spec: NodeSpec | None = None, *,
                      router="jsow", shared_state: bool = True,
                      route_quantile: float | None = None,
-                     faults=None) -> ClusterResult:
+                     faults=None,
+                     node_kwargs: dict | None = None) -> ClusterResult:
     """Event-driven multi-node simulation under a central scheduler.
 
     Arrival, step-complete, and finish events interleave across nodes:
@@ -519,6 +520,10 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
     device-resident ones re-prefill, keeping already-streamed tokens.
     Orphans are re-routed through the (dead-node-masked) router, or
     recorded in ``ClusterResult.aborted`` when no node survives.
+
+    node_kwargs: extra keyword arguments for every ``NodeSimulator``
+    (e.g. ``prefill_chunk``, ``block_size``, ``prefix_sharing`` — the
+    session-workload sharing experiments run through here).
     """
     reqs = sorted(requests, key=lambda r: r.arrival)
     if shared_state:
@@ -535,7 +540,8 @@ def simulate_cluster(requests: list[SimRequest], scheduler_factory,
         views = [NodeSchedulerView(scheds[n], n, masked=False,
                                    router=router_obj)
                  for n in range(n_nodes)]
-    sims = [NodeSimulator(views[n], spec, node_id=n)
+    sims = [NodeSimulator(views[n], spec, node_id=n,
+                          **(node_kwargs or {}))
             for n in range(n_nodes)]
     per_node = [0] * n_nodes
     fault_q = sorted(faults or [], key=lambda f: (f.at, f.node_id))

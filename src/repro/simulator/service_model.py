@@ -143,6 +143,22 @@ class ServiceModel:
         attn = chunk_tokens * max(0, ctx - 512) * (s.flops_per_token / 8192)
         return s.fixed_overhead_s + (ffn + attn) / (s.mfu * s.peak_flops)
 
+    def prefill_time_shared(self, input_tokens: int,
+                            cached_prefix: int) -> float:
+        """Prefill cost when the leading ``cached_prefix`` tokens' KV is
+        already resident (adopted from the prefix index — the engine's
+        copy-on-write sharing): only the remainder is computed, as one
+        chunk attending to the cached prefix.  ``cached_prefix <= 0``
+        degrades to the atomic ``prefill_time``; a fully-cached prompt
+        still pays one dispatch (the engine always recomputes at least
+        the final position).  Composed from the primitives, so
+        ``ScaledServiceModel`` inherits the scaling."""
+        cached = max(0, min(int(cached_prefix), int(input_tokens)))
+        if cached == 0:
+            return self.prefill_time(input_tokens)
+        return self.prefill_chunk_time(max(1, input_tokens - cached),
+                                       cached)
+
     def prefill_time_chunked(self, input_tokens: int,
                              chunk: int | None) -> float:
         """Total prefill time when split into ``chunk``-token pieces

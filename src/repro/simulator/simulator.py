@@ -111,6 +111,8 @@ class _Live:
     generated: int = 0
     prefilled: bool = False
     prefill_done: int = 0       # prompt tokens prefilled (chunked mode)
+    cached_prefix: int = 0      # prompt tokens adopted from the node's
+                                # prefix cache (prefix-sharing mode)
     resident_kv: int = 0        # KV tokens currently in HBM
     swapped: bool = False       # preempted with KV moved to host
     pending_swap_in: int = 0    # KV tokens to restore before decoding
@@ -131,7 +133,8 @@ class NodeSimulator:
                  node_id: int = -1,
                  prefill_chunk: int | None = None,
                  block_size: int = 1,
-                 memory_weight: float = 0.0):
+                 memory_weight: float = 0.0,
+                 prefix_sharing: bool = False):
         self.scheduler = scheduler
         self.model = ServiceModel(spec or NodeSpec())
         self.admit_headroom = admit_headroom
@@ -152,6 +155,16 @@ class NodeSimulator:
         # memory term in capacity-forced eviction (Scheduler.
         # eviction_order): 0 = pure reversed priority (seed behavior).
         self.memory_weight = memory_weight
+        # Prefix sharing: requests carrying a ``prefix_group`` adopt the
+        # group's longest published block-aligned prefix instead of re-
+        # prefilling it, priced through ServiceModel.prefill_time_shared
+        # — the same function documented for the real engine's saved
+        # work.  The prefix cache is node-local (mirrors the engine's
+        # per-node KV pool), so cluster routing decides how much reuse a
+        # session actually sees.  Off (default): seed behavior.
+        self.prefix_sharing = prefix_sharing
+        self._group_cached: dict[str, int] = {}
+        self.prefill_tokens_reused = 0
         self.node_id = node_id
         self.now = 0.0
         self.n_iterations = 0
@@ -211,6 +224,7 @@ class NodeSimulator:
             if not lv.swapped:             # router's placement accounting
                 lv.prefilled = False       # device KV lost: re-prefill
                 lv.prefill_done = 0
+                lv.cached_prefix = 0       # dead node's prefix cache too
                 lv.resident_kv = 0
             lv.metrics.n_preemptions += 1
             orphans.append(lv)
@@ -281,6 +295,30 @@ class NodeSimulator:
                         self.scheduler.on_progress(r.request_id,
                                                    lv.generated)
                     self._live[r.request_id] = lv
+
+    def _cached_prefix_for(self, req: SimRequest) -> int:
+        """Block-aligned prompt prefix adoptable from this node's prefix
+        cache, capped below the full prompt (the engine always computes
+        at least the final position — its block holding the rewind point
+        stays private)."""
+        if not self.prefix_sharing or not req.prefix_group:
+            return 0
+        avail = self._group_cached.get(req.prefix_group, 0)
+        bs = max(1, self.block_size)
+        m = min(req.shared_prefix_len, avail, req.input_len - 1)
+        return max(0, (m // bs) * bs)
+
+    def _publish_prefix(self, req: SimRequest) -> None:
+        """After a prefill completes, publish the request's sharable
+        leading blocks for later group members (a session turn publishes
+        its whole prompt; a tenant request only its system prompt)."""
+        if not self.prefix_sharing or not req.prefix_group:
+            return
+        bs = max(1, self.block_size)
+        pub = (min(req.sharable_prefix_len, req.input_len) // bs) * bs
+        g = req.prefix_group
+        if pub > self._group_cached.get(g, 0):
+            self._group_cached[g] = pub
 
     def _select_active(self, prev_active: list[str]) -> list[str]:
         """Greedy admission in scheduler-priority order under the KV
@@ -373,6 +411,12 @@ class NodeSimulator:
                 lv = live[rid]
                 if lv.prefilled or budget <= 0:
                     continue
+                if lv.prefill_done == 0:
+                    # chunked prefill starts at the divergence point:
+                    # the adopted prefix is already (virtually) resident
+                    lv.cached_prefix = self._cached_prefix_for(lv.req)
+                    lv.prefill_done = lv.cached_prefix
+                    self.prefill_tokens_reused += lv.cached_prefix
                 take = min(budget, lv.req.input_len - lv.prefill_done)
                 iter_time += self.model.prefill_chunk_time(take,
                                                            lv.prefill_done)
@@ -381,6 +425,7 @@ class NodeSimulator:
                 self.n_iterations += 1
                 if lv.prefill_done >= lv.req.input_len:
                     lv.prefilled = True
+                    self._publish_prefix(lv.req)
                     if lv.generated == 0:   # a migrated request re-
                         lv.generated = 1    # prefills but keeps its
                         lv.metrics.ttft = (self.now + iter_time  # progress
@@ -391,9 +436,13 @@ class NodeSimulator:
             for rid in active:
                 lv = live[rid]
                 if not lv.prefilled:
-                    iter_time += self.model.prefill_time(lv.req.input_len)
+                    lv.cached_prefix = self._cached_prefix_for(lv.req)
+                    self.prefill_tokens_reused += lv.cached_prefix
+                    iter_time += self.model.prefill_time_shared(
+                        lv.req.input_len, lv.cached_prefix)
                     lv.prefilled = True
                     lv.prefill_done = lv.req.input_len
+                    self._publish_prefix(lv.req)
                     if lv.generated == 0:   # see chunked branch: migrated
                         lv.generated = 1    # requests keep progress/ttft
                         lv.metrics.ttft = (self.now + iter_time

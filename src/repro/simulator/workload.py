@@ -38,7 +38,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = ["SemanticCluster", "DatasetProfile", "SimRequest",
-           "make_profile", "DATASET_NAMES", "generate_workload"]
+           "make_profile", "DATASET_NAMES", "generate_workload",
+           "generate_session_workload"]
 
 DATASET_NAMES = ("sharegpt", "alpaca", "write")
 
@@ -159,7 +160,19 @@ def make_profile(name: str, n_clusters: int = 12,
 
 @dataclass
 class SimRequest:
-    """One request as the simulator sees it."""
+    """One request as the simulator sees it.
+
+    The three prefix fields describe the *sharing structure* of session
+    workloads (all default to "no sharing", so every existing generator
+    and test is unchanged): requests with the same ``prefix_group``
+    belong to one prefix chain (a multi-turn session, or a tenant pool
+    sharing a system prompt).  ``shared_prefix_len`` is how many leading
+    tokens of THIS prompt are shared with *earlier* members of the group
+    (adoptable from a prefix cache); ``sharable_prefix_len`` is how many
+    of its leading tokens *later* members will share (what it publishes
+    — a session turn publishes its whole prompt because the next turn
+    extends it; a tenant request publishes only the system prompt, since
+    siblings diverge right after it)."""
 
     request_id: str
     arrival: float            # seconds
@@ -168,6 +181,9 @@ class SimRequest:
     true_output_len: int      # hidden from the scheduler until completion
     dataset: str
     cluster: SemanticCluster
+    prefix_group: str = ""
+    shared_prefix_len: int = 0
+    sharable_prefix_len: int = 0
 
 
 def generate_workload(profiles: list[DatasetProfile], n_requests: int,
@@ -204,4 +220,84 @@ def generate_workload(profiles: list[DatasetProfile], n_requests: int,
             true_output_len=cluster.sample_output_len(rng),
             dataset=prof.name,
             cluster=cluster))
+    return out
+
+
+def generate_session_workload(profiles: list[DatasetProfile],
+                              n_sessions: int, rps: float, seed: int = 0, *,
+                              turns: tuple[int, int] = (2, 4),
+                              think_time_s: float = 4.0,
+                              tenant_prob: float = 0.4,
+                              n_tenants: int = 4,
+                              system_prompt_tokens: int = 64,
+                              turn_user_tokens: int = 24
+                              ) -> list[SimRequest]:
+    """Session arrivals — the compound workload class prefix sharing
+    unlocks (LLMSched's stage-structured requests).  Sessions arrive
+    Poisson at ``rps`` and take one of two sharing shapes:
+
+      * **multi-turn chat** (prob ``1 - tenant_prob``): 2..N turns where
+        turn j's prompt is the whole accumulated conversation (previous
+        prompt + previous answer + a fresh user message), so each turn
+        shares its predecessor's full context (``shared_prefix_len``)
+        and publishes its own full prompt for the next turn
+        (``sharable_prefix_len == input_len``).  Turns are spaced by
+        exponential think time.
+      * **shared-system-prompt tenant** (prob ``tenant_prob``): a
+        one-shot request whose first ``system_prompt_tokens`` tokens are
+        the tenant's fixed system prompt — shared with every other
+        request of that tenant, diverging immediately after (so only the
+        system prompt is published as sharable).
+
+    Deterministic per seed; returned sorted by arrival time.  Output
+    lengths still come from the semantic clusters, so predictors behave
+    exactly as on the one-shot workloads."""
+    lo, hi = int(turns[0]), int(turns[1])
+    if lo < 1 or hi < lo:
+        raise ValueError(f"bad turns range {turns!r}")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: list[SimRequest] = []
+    for i in range(n_sessions):
+        t += float(rng.exponential(1.0 / rps))
+        prof = profiles[int(rng.integers(len(profiles)))]
+        cluster = prof.clusters[int(rng.integers(len(prof.clusters)))]
+        if rng.random() < tenant_prob:
+            tenant = int(rng.integers(n_tenants))
+            user_len = cluster.sample_input_len(rng)
+            out.append(SimRequest(
+                request_id=f"sess-{i:05d}-t0",
+                arrival=t,
+                prompt=(f"[tenant-{tenant} system] "
+                        + cluster.sample_prompt(rng)),
+                input_len=system_prompt_tokens + user_len,
+                true_output_len=cluster.sample_output_len(rng),
+                dataset=prof.name,
+                cluster=cluster,
+                prefix_group=f"tenant-{tenant}",
+                shared_prefix_len=system_prompt_tokens,
+                sharable_prefix_len=system_prompt_tokens))
+            continue
+        n_turns = int(rng.integers(lo, hi + 1))
+        base_prompt = cluster.sample_prompt(rng)
+        arrival = t
+        ctx = 0
+        for j in range(n_turns):
+            user_len = int(rng.integers(8, 2 * turn_user_tokens + 1))
+            input_len = ctx + user_len
+            out_len = cluster.sample_output_len(rng)
+            out.append(SimRequest(
+                request_id=f"sess-{i:05d}-t{j}",
+                arrival=arrival,
+                prompt=f"{base_prompt} [turn {j}]",
+                input_len=input_len,
+                true_output_len=out_len,
+                dataset=prof.name,
+                cluster=cluster,
+                prefix_group=f"sess-{i:05d}",
+                shared_prefix_len=ctx,
+                sharable_prefix_len=input_len))
+            ctx = input_len + out_len
+            arrival += float(rng.exponential(think_time_s))
+    out.sort(key=lambda r: (r.arrival, r.request_id))
     return out

@@ -169,17 +169,29 @@ def assert_engine_quiesced(engine) -> None:
     """Post-fault invariant bundle for a drained ``ServingEngine``:
 
       * KV block accounting conserves exactly
-        (``KVCacheManager.assert_conserved``);
+        (``KVCacheManager.assert_conserved``), and the prefix index
+        matches a from-scratch rebuild (``check_prefix_index``);
+      * no shared-block refcount outlives its readers: with every
+        request terminal, the refcount map must be empty — sharing has
+        dropped back to private-only (nothing), only refcount-0 cached
+        prefix blocks may remain;
       * no request is still live;
       * every non-FINISHED terminal request carries a ``finish_reason``
         (nothing vanished without an attributable cause).
     """
     engine.kv.assert_conserved()
+    engine.kv.check_prefix_index()
     from ..serving.request import RequestState
     stuck = {rid: r.state.value
              for rid, r in engine._requests.items() if not r.done}
     if stuck:
         raise AssertionError(f"engine not quiesced; live requests: {stuck}")
+    lingering = engine.kv.live_refcounts()
+    if lingering:
+        shared = {b: c for b, c in lingering.items() if c > 1}
+        raise AssertionError(
+            "blocks still referenced after every request reached a "
+            f"terminal state: {lingering} (shared: {shared})")
     unexplained = [
         rid for rid, r in engine._requests.items()
         if r.state in (RequestState.ABORTED, RequestState.SHED)

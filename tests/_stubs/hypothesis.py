@@ -3,18 +3,28 @@
 Loaded by conftest.py ONLY when the real hypothesis is not installed
 (this container doesn't ship it), so the property-test modules still
 collect and run.  It covers exactly the API surface this repo uses —
-``given``, ``settings``, and the ``lists`` / ``integers`` / ``floats`` /
-``tuples`` / ``sampled_from`` strategies — by drawing ``max_examples``
-pseudo-random samples per test from a seed derived from the test name
-(deterministic across runs).  No shrinking, no edge-case bias: a weaker
-substitute, not a replacement — installing the real library transparently
-takes precedence on machines that have it.
+``given``, ``settings``, and the ``integers`` / ``floats`` / ``lists`` /
+``tuples`` / ``sampled_from`` / ``booleans`` / ``just`` / ``composite``
+strategies — by drawing ``max_examples`` pseudo-random samples per test.
+No shrinking, no edge-case bias: a weaker substitute, not a replacement —
+installing the real library transparently takes precedence on machines
+that have it.
+
+Reproduction: each example draws from its own seed (derived from the
+test's qualname + example index).  When an example fails, the stub prints
+``REPRO_HYPOTHESIS_SEED=<seed>`` to stderr before re-raising; exporting
+that variable re-runs ONLY the failing seed, turning a 200-example fuzz
+run into a single deterministic replay::
+
+    REPRO_HYPOTHESIS_SEED=123456789 pytest tests/test_kv_fuzz.py -x
 """
 
 from __future__ import annotations
 
 import functools
 import inspect
+import os
+import sys
 import types
 import zlib
 
@@ -38,6 +48,14 @@ def _floats(min_value, max_value, **_ignored):
     return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
 
 
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value)
+
+
 def _lists(elements, min_size=0, max_size=10):
     def draw(rng):
         n = int(rng.integers(min_size, max_size + 1))
@@ -54,9 +72,23 @@ def _sampled_from(seq):
     return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
 
+def _composite(fn):
+    """``@st.composite`` — ``fn(draw, *args, **kwargs)`` builds a value
+    from other strategies.  The returned callable produces a _Strategy
+    whose draw hands ``fn`` a ``draw(strategy)`` function, mirroring the
+    real hypothesis API closely enough for tests written against it."""
+    @functools.wraps(fn)
+    def build(*args, **kwargs):
+        def draw(rng):
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+        return _Strategy(draw)
+    return build
+
+
 strategies = types.SimpleNamespace(
     integers=_integers, floats=_floats, lists=_lists, tuples=_tuples,
-    sampled_from=_sampled_from)
+    sampled_from=_sampled_from, booleans=_booleans, just=_just,
+    composite=_composite)
 
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
@@ -72,12 +104,24 @@ def given(*strats, **kwstrats):
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
-            rng = np.random.default_rng(
-                zlib.crc32(fn.__qualname__.encode()))
-            for _ in range(n):
-                vals = [s.draw(rng) for s in strats]
-                kvals = {k: s.draw(rng) for k, s in kwstrats.items()}
-                fn(*args, *vals, **kwargs, **kvals)
+            base = zlib.crc32(fn.__qualname__.encode())
+            pinned = os.environ.get("REPRO_HYPOTHESIS_SEED")
+            if pinned is not None:
+                seeds = [int(pinned)]
+            else:
+                seeds = [(base + i) & 0xFFFFFFFF for i in range(n)]
+            for seed in seeds:
+                rng = np.random.default_rng(seed)
+                try:
+                    vals = [s.draw(rng) for s in strats]
+                    kvals = {k: s.draw(rng) for k, s in kwstrats.items()}
+                    fn(*args, *vals, **kwargs, **kvals)
+                except Exception:
+                    print(f"\nREPRO_HYPOTHESIS_SEED={seed}  "
+                          f"(re-run with this env var to replay only "
+                          f"the failing example of {fn.__qualname__})",
+                          file=sys.stderr)
+                    raise
         # hide the drawn parameters from pytest's fixture resolution
         del wrapper.__wrapped__
         wrapper.__signature__ = inspect.Signature()

@@ -1,0 +1,377 @@
+"""Property-based allocator fuzz for the copy-on-write paged KV layer.
+
+A random interleaving of every externally reachable ``KVCacheManager``
+mutation — allocate / allocate_shared (via ``match_prefix``, mirroring
+the engine's admission path) / grow / fork_block / swap_out / swap_in /
+release / drop_swapped — runs against a deliberately tiny pool, and
+after EVERY operation the full invariant bundle is asserted:
+
+  * block conservation — every physical block is in exactly one of
+    {free, cached, referenced}, and the three partitions sum to the
+    pool (``assert_conserved``);
+  * refcounts equal live readers — the per-block refcount map is
+    recomputed from the allocations' block tables and must match;
+  * the scratch block (physical 0) never enters any partition;
+  * the prefix index equals a from-scratch rebuild over per-block
+    content tags (``check_prefix_index``) — no stale or missing
+    entries after any eviction / fork / swap interleaving;
+  * owned (refcount-weighted) blocks sum exactly to distinct used
+    blocks, and each allocation's block table length matches
+    ``blocks_for`` of its token count.
+
+Prompts are drawn from a handful of shared base pools so random
+sequences collide on prefixes constantly — the interesting regime.
+
+Scaling & reproduction
+----------------------
+``REPRO_FUZZ_EXAMPLES`` sets the example count (default 200 — the CI
+floor; the nightly workflow runs 2000).  On failure the harness raises
+with the exact operation list embedded, and the hypothesis stub prints
+``REPRO_HYPOTHESIS_SEED=<seed>`` — export it to replay only the failing
+example:
+
+    REPRO_HYPOTHESIS_SEED=123456789 pytest tests/test_kv_fuzz.py -x
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.kv_cache import SCRATCH_BLOCK, KVCacheManager
+
+MAX_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "200"))
+
+BLOCK = 8
+KV_PARAMS = dict(n_slots=4, max_seq_len=96, capacity_tokens=20 * BLOCK,
+                 block_size=BLOCK, swap_capacity_tokens=24 * BLOCK)
+
+# three shared base prompts: random cuts of these collide on block
+# boundaries, exercising the prefix index far more than fresh prompts
+BASES = [[1000 * k + j for j in range(96)] for k in range(3)]
+
+OPS = ("alloc", "grow", "fork", "swap_out", "swap_in", "free",
+       "drop_swapped")
+
+
+@st.composite
+def op_sequences(draw):
+    n = draw(st.integers(min_value=4, max_value=40))
+    ops = []
+    for _ in range(n):
+        ops.append((draw(st.sampled_from(OPS)),
+                    draw(st.integers(min_value=0, max_value=2)),
+                    draw(st.integers(min_value=0, max_value=7)),
+                    draw(st.integers(min_value=1, max_value=18))))
+    return ops
+
+
+def _check(kv: KVCacheManager) -> None:
+    """The per-operation invariant bundle."""
+    kv.assert_conserved()            # conservation + refcounts + scratch
+    kv.check_prefix_index()          # rebuilt index == incremental index
+    assert abs(kv.owned_blocks - kv.used_blocks) < 1e-9, \
+        "refcount-weighted ownership does not sum to used blocks"
+    for rid in list(kv._held):
+        a = kv._held[rid]
+        assert len(a.blocks) == kv.blocks_for(a.tokens)
+        assert SCRATCH_BLOCK not in a.blocks
+
+
+def run_ops(ops) -> None:
+    """Interpret one drawn operation sequence against a fresh manager,
+    checking invariants after every step.  Operations whose
+    preconditions don't hold (pool exhausted, nothing to act on) are
+    no-ops — the manager must refuse them without partial mutation."""
+    kv = KVCacheManager(**KV_PARAMS)
+    live: list[str] = []
+    swapped: list[str] = []
+    rid_seq = itertools.count()
+    fresh = itertools.count(10**6)   # never collides with base tokens
+
+    for kind, base_idx, sel, amount in ops:
+        if kind == "alloc" and kv.free_slots:
+            cut = (sel % 8) * BLOCK
+            prompt = BASES[base_idx][:cut] + [next(fresh)
+                                              for _ in range(amount)]
+            prompt = prompt[:KV_PARAMS["max_seq_len"] - BLOCK]
+            rid = f"r{next(rid_seq)}"
+            matched, blocks, hashes = kv.match_prefix(prompt)
+            # engine-style cap: the block holding the final prompt
+            # position stays private (decode re-writes that position)
+            k = min(len(blocks), max(0, (len(prompt) - 1) // BLOCK))
+            try:
+                kv.allocate_shared(rid, len(prompt), blocks[:k],
+                                   hashes[:k])
+            except RuntimeError:     # pool exhausted: refused atomically
+                _check(kv)
+                continue
+            kv.register_prefix(rid, prompt)
+            live.append(rid)
+        elif kind == "grow" and live:
+            kv.grow(live[sel % len(live)], amount)
+        elif kind == "fork" and live:
+            rid = live[sel % len(live)]
+            idx = sel % len(kv._held[rid].blocks)
+            try:
+                kv.fork_block(rid, idx)
+            except RuntimeError:
+                pass                 # no reclaimable block for the copy
+        elif kind == "swap_out" and live:
+            rid = live[sel % len(live)]
+            if kv.can_swap_out(rid):
+                kv.swap_out(rid, payload={"rid": rid})
+                live.remove(rid)
+                swapped.append(rid)
+        elif kind == "swap_in" and swapped:
+            rid = swapped[sel % len(swapped)]
+            try:
+                slot, payload = kv.swap_in(rid)
+            except RuntimeError:     # no slot / no blocks: refused
+                _check(kv)
+                continue
+            assert payload == {"rid": rid}
+            swapped.remove(rid)
+            live.append(rid)
+        elif kind == "free" and live:
+            kv.release(live.pop(sel % len(live)))
+        elif kind == "drop_swapped" and swapped:
+            kv.drop_swapped(swapped.pop(sel % len(swapped)))
+        _check(kv)
+
+    # drain: every path back to an empty manager must conserve too
+    for rid in list(live):
+        kv.release(rid)
+        _check(kv)
+    for rid in list(swapped):
+        kv.drop_swapped(rid)
+        _check(kv)
+    assert kv.used_blocks == 0 and not kv.live_refcounts()
+    assert kv.free_blocks == kv.n_blocks   # cached blocks still count
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(ops=op_sequences())
+def test_allocator_fuzz(ops):
+    try:
+        run_ops(ops)
+    except Exception as e:  # embed the program for replay anywhere
+        raise AssertionError(
+            f"allocator fuzz violated an invariant: {e}\n"
+            f"failing op sequence (feed to run_ops to replay):\n"
+            f"{ops!r}") from e
+
+
+# ------------------------------------------------------ deterministic
+# Pinned scenarios for the properties the fuzz asserts statistically.
+
+
+def _mgr(**over):
+    return KVCacheManager(**{**KV_PARAMS, **over})
+
+
+def _admit(kv, rid, prompt):
+    """Engine-style admission: match, adopt, register."""
+    matched, blocks, hashes = kv.match_prefix(prompt)
+    k = min(len(blocks), max(0, (len(prompt) - 1) // kv.block_size))
+    kv.allocate_shared(rid, len(prompt), blocks[:k], hashes[:k])
+    kv.register_prefix(rid, prompt)
+    return k
+
+
+def test_refcounts_equal_readers():
+    kv = _mgr()
+    prompt = BASES[0][:3 * BLOCK]            # 3 full blocks
+    assert _admit(kv, "a", prompt) == 0      # first writer: nothing shared
+    for rid in ("b", "c"):
+        assert _admit(kv, rid, prompt) == 2  # last block stays private
+    shared = kv._held["a"].blocks[:2]
+    assert all(kv.refcount_of(b) == 3 for b in shared)
+    # 3 private tails + 2 shared blocks distinct; ownership sums exactly
+    assert kv.used_blocks == 5
+    assert abs(kv.owned_blocks - 5.0) < 1e-9
+    assert kv.shared_excess_blocks("b") == pytest.approx(2 * (1 - 1 / 3))
+    _check(kv)
+
+
+def test_fork_block_gives_private_copy():
+    kv = _mgr()
+    prompt = BASES[0][:3 * BLOCK]
+    _admit(kv, "a", prompt)
+    _admit(kv, "b", prompt)
+    old = kv._held["b"].blocks[0]
+    assert kv.refcount_of(old) == 2
+    pair = kv.fork_block("b", 0)
+    assert pair is not None and pair[0] == old
+    assert kv.refcount_of(old) == 1 and kv.refcount_of(pair[1]) == 1
+    assert kv._held["b"].hashes == []        # published chain truncated
+    _check(kv)
+    assert kv.fork_block("b", 0) is None     # already private
+
+
+def test_cached_tier_survives_release():
+    kv = _mgr()
+    prompt = BASES[1][:4 * BLOCK]
+    _admit(kv, "a", prompt)
+    kv.release("a")
+    # indexed blocks park in the cached tier, still reclaimable
+    assert kv.cached_blocks == 3
+    assert kv.free_blocks == kv.n_blocks
+    used_before = kv.used_blocks
+    assert _admit(kv, "b", prompt) == 3      # re-adopted, not re-filled
+    assert kv.adopted_blocks_of("b") == 3
+    assert kv.used_blocks == used_before + 4
+    _check(kv)
+
+
+def test_swap_preserves_share_structure():
+    kv = _mgr()
+    prompt = BASES[2][:4 * BLOCK]
+    _admit(kv, "a", prompt)
+    _admit(kv, "b", prompt)
+    kv.swap_out("b", payload={"k": "payload-b"})
+    _check(kv)
+    slot, payload = kv.swap_in("b")
+    assert payload == {"k": "payload-b"}
+    # the shared prefix was still resident (held by "a"): re-adopted
+    assert kv.adopted_blocks_of("b") == 3
+    assert kv._held["b"].blocks[:3] == kv._held["a"].blocks[:3]
+    _check(kv)
+
+
+def test_corrupted_refcount_trips_conservation():
+    kv = _mgr()
+    _admit(kv, "a", BASES[0][:2 * BLOCK])
+    kv._ref[kv._held["a"].blocks[0]] += 1    # simulate a leaked reference
+    with pytest.raises(RuntimeError, match="refcounts"):
+        kv.assert_conserved()
+
+
+def test_allocate_shared_validates_inputs():
+    kv = _mgr()
+    with pytest.raises(ValueError, match="length mismatch"):
+        kv.allocate_shared("a", 16, [1], [])
+    with pytest.raises(ValueError, match="longer than the context"):
+        kv.allocate_shared("a", 8, [1, 2], [11, 22])
+    with pytest.raises(ValueError, match="block_size"):
+        KVCacheManager(n_slots=1, max_seq_len=8, block_size=0)
+
+
+def test_register_prefix_rejects_divergent_chain():
+    kv = _mgr()
+    prompt = BASES[0][:3 * BLOCK]
+    _admit(kv, "a", prompt)
+    _admit(kv, "b", prompt)          # b records a's chain at adoption
+    divergent = BASES[1][:3 * BLOCK]
+    with pytest.raises(RuntimeError, match="diverged"):
+        kv.register_prefix("b", divergent)
+
+
+def test_corrupted_index_trips_rebuild_check():
+    kv = _mgr()
+    _admit(kv, "a", BASES[0][:3 * BLOCK])
+    kv._index[999999] = kv._held["a"].blocks[0]   # stale phantom entry
+    with pytest.raises(RuntimeError, match="drifted"):
+        kv.check_prefix_index()
+
+
+def test_corrupted_ledgers_trip_conservation():
+    kv = _mgr()
+    _admit(kv, "a", BASES[0][:2 * BLOCK])
+    b = kv._held["a"].blocks[0]
+    kv._free_blocks.append(b)                     # free AND referenced
+    with pytest.raises(RuntimeError, match="free and referenced"):
+        kv.assert_conserved()
+    kv._free_blocks.pop()
+    kv._free_blocks.append(SCRATCH_BLOCK)         # scratch leaked in
+    with pytest.raises(RuntimeError, match="scratch"):
+        kv.assert_conserved()
+    kv._free_blocks.pop()
+    kv._free_slots.append(kv._held["a"].slot)     # slot double-booked
+    with pytest.raises(RuntimeError, match="slot ledger"):
+        kv.assert_conserved()
+
+
+def test_pool_exhaustion_is_refused_atomically():
+    kv = _mgr(n_slots=8, capacity_tokens=4 * BLOCK)
+    prompt = BASES[0][:3 * BLOCK]
+    _admit(kv, "a", prompt)
+    _admit(kv, "b", prompt)          # 2 shared + 2 private tails: full
+    assert kv.free_blocks == 0
+    with pytest.raises(RuntimeError, match="no free blocks"):
+        kv.allocate("c", BLOCK)
+    with pytest.raises(RuntimeError, match="no free blocks"):
+        kv.fork_block("b", 0)        # CoW copy needs a reclaimable block
+    assert not kv.grow("a", BLOCK)   # refused, no partial mutation
+    _check(kv)
+    assert not kv.can_admit(BLOCK)
+    # duplicate-id and missing-slot guards
+    with pytest.raises(KeyError):
+        kv.allocate("a", BLOCK)
+    kv.swap_out("a")
+    assert kv.can_swap_in("a") or not kv.can_swap_in("a")  # well-defined
+    _check(kv)
+
+
+def test_swap_pool_capacity_enforced():
+    kv = _mgr(swap_capacity_tokens=2 * BLOCK)
+    _admit(kv, "a", BASES[0][:2 * BLOCK])
+    _admit(kv, "b", BASES[1][:2 * BLOCK])
+    kv.swap_out("a")                 # fills the 2-block host pool
+    assert not kv.can_swap_out("b")
+    with pytest.raises(RuntimeError, match="host swap pool full"):
+        kv.swap_out("b")
+    _check(kv)
+    # swap_in with every slot taken is refused atomically
+    kv2 = _mgr(n_slots=1)
+    _admit(kv2, "x", BASES[0][:2 * BLOCK])
+    kv2.swap_out("x")
+    _admit(kv2, "y", BASES[1][:2 * BLOCK])
+    with pytest.raises(RuntimeError, match="no free slots"):
+        kv2.swap_in("x")
+    _check(kv2)
+
+
+def test_grow_upto_grants_partial():
+    kv = _mgr(n_slots=2, capacity_tokens=4 * BLOCK, max_seq_len=96)
+    kv.allocate("a", 2 * BLOCK)
+    # 2 blocks left: a 3-block ask is granted up to the pool edge
+    granted = kv.grow_upto("a", 3 * BLOCK)
+    assert granted == 2 * BLOCK
+    assert kv.free_blocks == 0
+    _check(kv)
+
+
+def test_no_free_slots_refused():
+    kv = _mgr(n_slots=1)
+    kv.allocate("a", BLOCK)
+    with pytest.raises(RuntimeError, match="no free slots"):
+        kv.allocate("b", BLOCK)
+    with pytest.raises(RuntimeError, match="no free slots"):
+        kv.allocate_shared("b", BLOCK, [], [])
+    with pytest.raises(KeyError):
+        kv.allocate_shared("a", BLOCK, [], [])   # duplicate id
+    assert not kv.can_admit(BLOCK)
+
+
+def test_accounting_accessors():
+    kv = _mgr()
+    _admit(kv, "a", BASES[0][:2 * BLOCK + 3])    # partial last block
+    assert kv.slot_of("a") == kv._held["a"].slot
+    assert kv.block_table("a") == kv._held["a"].blocks
+    assert kv.used_tokens == 2 * BLOCK + 3
+    assert kv.frag_tokens == BLOCK - 3
+    assert kv.tokens_of("a") == 2 * BLOCK + 3
+    assert kv.admission_budget_tokens == kv.budget_blocks * BLOCK
+    assert kv.pool_blocks == kv.n_blocks + 1
+    assert kv.blocks_for(0) == 1                 # a request pins >= 1
+    kv.swap_out("a")
+    assert kv.swapped_tokens == 2 * BLOCK + 3
+    assert kv.swapped_tokens_of("a") == 2 * BLOCK + 3
+    assert kv.is_swapped("a") and not kv.holds("a")
+    snap = kv.conservation()
+    assert snap["swapped_blocks"] == 3 and snap["held_blocks"] == 0

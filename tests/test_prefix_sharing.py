@@ -1,0 +1,241 @@
+"""Copy-on-write prefix sharing: differential parity + reuse accounting.
+
+The load-bearing claim: ``prefix_sharing=True`` is a pure *cost*
+optimization — for every servable model family, both preemption modes
+and both step modes, the emitted token streams are bit-identical to the
+sharing-off engine, while ``EngineMetrics.prefill_tokens_reused`` proves
+real work was skipped.  Parity is constructive, not accidental: matches
+are capped to the lcm(prefill_chunk, block_size) grid, so the resumed
+chunked prefill lands on the exact absolute chunk boundaries a
+from-scratch prefill would use (same per-chunk shapes -> same float
+rounding -> same KV bits).  SSM/hybrid families cannot resume a prefill
+mid-context, so sharing is inert for them — parity still holds with
+zero reuse.
+
+Also covered: session traffic through the Gateway front door, and the
+simulator's node-level mirror of the same mechanism driven by
+``generate_session_workload`` through ``simulate_cluster``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LengthDistribution, OraclePredictor, Scheduler,
+                        make_policy)
+from repro.models import build_model
+from repro.serving import (Gateway, GatewayConfig, RequestState,
+                           ServeRequest, ServingEngine)
+from repro.simulator import NodeSimulator, make_profile, simulate_cluster
+from repro.simulator.workload import generate_session_workload
+from repro.testing import VirtualClock, assert_engine_quiesced
+
+FAMILIES = ["llama3.2-1b", "internvl2-76b", "olmoe-1b-7b", "mamba2-2.7b",
+            "zamba2-1.2b"]
+# families whose attention KV supports resuming a prefill mid-context —
+# the only ones where sharing can actually skip work
+KV_CHUNKED = {"llama3.2-1b", "internvl2-76b", "olmoe-1b-7b"}
+
+PROFILES = [make_profile(n) for n in ("sharegpt", "alpaca", "write")]
+
+
+def _run(arch, *, sharing, pmode="swap", step_mode="fused",
+         temperature=0.0, n=4, n_slots=2, cap=96):
+    """Run ``n`` requests sharing a 24-token base prefix to completion;
+    returns (engine, per-request output token lists)."""
+    cfg = get_config(arch, reduced=True)
+    o = OraclePredictor()
+    for i in range(n):
+        o.register(f"p{i}", LengthDistribution(np.array([6 + 2 * i]),
+                                               np.array([1.0])))
+    eng = ServingEngine(
+        model=build_model(cfg),
+        scheduler=Scheduler(policy=make_policy("sagesched"), predictor=o),
+        n_slots=n_slots, max_seq_len=96, capacity_tokens=cap,
+        block_size=8, preemption_mode=pmode, prefill_chunk=16,
+        seed=0, step_mode=step_mode, prefix_sharing=sharing)
+    rng = np.random.default_rng(11)
+    base = [int(t) for t in rng.integers(3, cfg.vocab_size, 24)]
+    reqs = []
+    for i in range(n):
+        toks = base + [int(t) for t in rng.integers(3, cfg.vocab_size,
+                                                    4 + i)]
+        reqs.append(ServeRequest(f"r{i}", f"p{i}", toks,
+                                 max_new_tokens=6 + 2 * i,
+                                 temperature=temperature, eos_token=1,
+                                 arrival=float(i) * 1e-3))
+    eng.submit_batch(reqs)
+    eng.run_until_done(max_steps=8000)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert_engine_quiesced(eng)
+    return eng, [r.output_tokens for r in reqs]
+
+
+# ------------------------------------------------- differential parity
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("pmode", ["swap", "recompute"])
+def test_sharing_is_token_identical(arch, pmode):
+    """The acceptance criterion: sharing ON == sharing OFF, bit for bit,
+    for every family x preemption mode x step mode — while the reuse
+    counter proves KV-chunked families actually skipped prefill work."""
+    for step_mode in ("fused", "orchestrated"):
+        off, want = _run(arch, sharing=False, pmode=pmode,
+                         step_mode=step_mode)
+        on, got = _run(arch, sharing=True, pmode=pmode,
+                       step_mode=step_mode)
+        assert got == want, f"{arch}/{pmode}/{step_mode} streams diverged"
+        assert off.metrics.prefill_tokens_reused == 0
+        if arch in KV_CHUNKED:
+            assert on.metrics.prefill_tokens_reused > 0
+            # reused tokens were not re-computed
+            assert (on.metrics.prefill_tokens
+                    + on.metrics.prefill_tokens_reused
+                    == off.metrics.prefill_tokens)
+        else:
+            # recurrent state can't resume mid-context: sharing is inert
+            assert on.metrics.prefill_tokens_reused == 0
+            assert on.metrics.prefill_tokens == off.metrics.prefill_tokens
+
+
+def test_sharing_parity_survives_stochastic_sampling():
+    """Fused sampling is keyed by (request, position), never the slot or
+    schedule, so parity holds even at temperature > 0 — where the two
+    engines take different prefill paths."""
+    on, got = _run("llama3.2-1b", sharing=True, temperature=0.7)
+    _, want = _run("llama3.2-1b", sharing=False, temperature=0.7)
+    assert got == want
+    assert on.metrics.prefill_tokens_reused > 0
+
+
+def test_sharing_parity_multi_tenant_prefixes():
+    """Two distinct system prompts: matches never cross prefix chains
+    (a wrong-chain adoption would corrupt tokens, so parity is the
+    detector)."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    rng = np.random.default_rng(5)
+    bases = [[int(t) for t in rng.integers(3, cfg.vocab_size, 24)]
+             for _ in range(2)]
+
+    def build(sharing):
+        o = OraclePredictor()
+        for i in range(6):
+            o.register(f"p{i}", LengthDistribution(np.array([6]),
+                                                   np.array([1.0])))
+        eng = ServingEngine(
+            model=build_model(cfg),
+            scheduler=Scheduler(policy=make_policy("sagesched"),
+                                predictor=o),
+            n_slots=2, max_seq_len=96, capacity_tokens=128, block_size=8,
+            prefill_chunk=16, seed=0, prefix_sharing=sharing)
+        srng = np.random.default_rng(9)
+        reqs = [ServeRequest(
+            f"r{i}", f"p{i}",
+            bases[i % 2] + [int(t) for t in srng.integers(
+                3, cfg.vocab_size, 3 + i)],
+            max_new_tokens=6, temperature=0.0, eos_token=1,
+            arrival=float(i) * 1e-3) for i in range(6)]
+        eng.submit_batch(reqs)
+        eng.run_until_done(max_steps=8000)
+        assert_engine_quiesced(eng)
+        return eng, [r.output_tokens for r in reqs]
+
+    _, want = build(False)
+    on, got = build(True)
+    assert got == want
+    assert on.metrics.prefill_tokens_reused > 0
+
+
+# ------------------------------------------------------- gateway path
+
+def test_gateway_session_traffic_reuses_prefixes():
+    """Shared-system-prompt tenants through the bounded front door: the
+    engine under the Gateway adopts prefixes, every request terminates,
+    and the quiesced-engine invariants (including the prefix-index
+    rebuild) hold."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    o = OraclePredictor()
+    o.register("p", LengthDistribution(np.array([6]), np.array([1.0])))
+    eng = ServingEngine(
+        model=build_model(cfg),
+        scheduler=Scheduler(policy=make_policy("fcfs"), predictor=o),
+        n_slots=2, max_seq_len=96, capacity_tokens=128, block_size=8,
+        prefill_chunk=16, seed=0, clock=VirtualClock(),
+        prefix_sharing=True)
+    gw = Gateway(eng, GatewayConfig(max_inflight=4))
+    rng = np.random.default_rng(3)
+    system = [int(t) for t in rng.integers(3, cfg.vocab_size, 24)]
+    reqs = [ServeRequest(f"s{i}", "p",
+                         system + [int(t) for t in rng.integers(
+                             3, cfg.vocab_size, 4)],
+                         max_new_tokens=6, eos_token=1, tenant="acme",
+                         session_id=f"sess-{i}")
+            for i in range(5)]
+    gw.offer_batch(reqs)
+    gw.run_until_drained(max_steps=5000)
+    gw.assert_all_terminal()
+    gw.check_invariants()
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert eng.metrics.prefill_tokens_reused > 0
+    assert_engine_quiesced(eng)
+
+
+# ------------------------------------------------- simulator mirror
+
+def test_session_workload_generator_is_consistent():
+    """Deterministic per seed; session chains are well-formed: turn j+1
+    shares exactly what turn j published, tenants share only the system
+    prompt, and arrivals are sorted."""
+    a = generate_session_workload(PROFILES, 40, rps=10.0, seed=7)
+    b = generate_session_workload(PROFILES, 40, rps=10.0, seed=7)
+    assert [(r.request_id, r.arrival, r.input_len, r.prefix_group,
+             r.shared_prefix_len, r.sharable_prefix_len)
+            for r in a] == \
+           [(r.request_id, r.arrival, r.input_len, r.prefix_group,
+             r.shared_prefix_len, r.sharable_prefix_len) for r in b]
+    assert a != generate_session_workload(PROFILES, 40, rps=10.0, seed=8)
+    assert all(r.arrival <= s.arrival for r, s in zip(a, a[1:]))
+    chains: dict[str, list] = {}
+    for r in a:
+        assert 0 <= r.shared_prefix_len <= r.input_len
+        assert 0 <= r.sharable_prefix_len <= r.input_len
+        if r.prefix_group.startswith("sess-"):
+            chains.setdefault(r.prefix_group, []).append(r)
+    assert chains, "no multi-turn sessions generated"
+    for turns in chains.values():
+        turns.sort(key=lambda r: r.arrival)
+        assert turns[0].shared_prefix_len == 0
+        for prev, cur in zip(turns, turns[1:]):
+            # each turn's prompt extends the accumulated conversation:
+            # it shares the predecessor's full context (prompt + answer)
+            # and publishes its whole own prompt for the next turn
+            assert cur.shared_prefix_len == (prev.input_len
+                                             + prev.true_output_len)
+            assert cur.sharable_prefix_len == cur.input_len
+            assert cur.input_len > prev.input_len
+
+
+def test_cluster_session_sharing_reuses_and_speeds_up_ttft():
+    """The simulator's node-level mirror: with sharing on, session
+    turns skip their cached prefix — reuse is counted and mean TTFT
+    can only improve (prefill work strictly shrinks)."""
+    reqs = generate_session_workload(PROFILES, 60, rps=14.0, seed=2)
+
+    def run(sharing):
+        return simulate_cluster(
+            reqs, lambda: Scheduler(policy=make_policy("sagesched")), 2,
+            node_kwargs=dict(prefill_chunk=64, block_size=16,
+                             prefix_sharing=sharing))
+
+    off = run(False)
+    on = run(True)
+    assert sum(len(r.metrics) for r in off.node_results) == len(reqs)
+    assert sum(len(r.metrics) for r in on.node_results) == len(reqs)
+    assert on.mean_ttft <= off.mean_ttft
+    # the NodeSimulator instances aren't kept on the cluster result; run
+    # one node standalone to read the reuse counter on the same traffic
+    sim = NodeSimulator(Scheduler(policy=make_policy("sagesched")),
+                        prefill_chunk=64, block_size=16,
+                        prefix_sharing=True)
+    sim.run(list(reqs))
+    assert sim.prefill_tokens_reused > 0
