@@ -50,7 +50,13 @@ def decode_attention_paged_op(q, k_pool, v_pool, block_tables, cache_len, *,
     call: the padded table entries point at physical page 0 (the serving
     engine's scratch page) and sit past every row's ``cache_len``, so
     they are masked out — the kernel's grid/index-map signature stays on
-    the bounded bucket ladder no matter how callers size their tables."""
+    the bounded bucket ladder no matter how callers size their tables.
+
+    Per-shard invariant (docs/sharded_serving.md): KV is a pure batch
+    dim here — the kernel never contracts or reduces over it — so a
+    mesh that splits the pool over kv-heads runs this exact kernel on
+    per-shard pool slices with an unchanged grid; the block tables it
+    indexes with are global and shard-invariant."""
     native = jax.default_backend() == "tpu"
     if not native and not force_pallas:
         return decode_attention_paged_reference(

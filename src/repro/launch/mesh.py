@@ -8,6 +8,7 @@ sees the real single-device CPU).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -20,6 +21,27 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_local_mesh(*, tp: int = 1, data: int = 1):
+    """(data, model) mesh over the devices this process actually has —
+    accelerators or host-platform CPU devices alike (``jax.make_mesh``
+    assumes the full accelerator complement and trips on dev boxes).
+
+    Defaults to the degenerate 1x1 smoke-test mesh.  Axis sizes are
+    validated against ``jax.device_count()``; on a CPU box, more host
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set before jax is imported), which is how CI drives the sharded
+    serving parity suite."""
+    if tp < 1 or data < 1:
+        raise ValueError(f"make_local_mesh: bad axis sizes data={data} "
+                         f"tp={tp}")
+    need = data * tp
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"make_local_mesh: data={data} x model={tp} needs {need} "
+            f"devices but jax sees {have} ({jax.devices()[0].platform}); "
+            "on a CPU dev box set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before "
+            "importing jax")
+    devices = np.array(jax.devices()[:need]).reshape(data, tp)
+    return jax.sharding.Mesh(devices, ("data", "model"))

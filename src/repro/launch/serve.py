@@ -34,6 +34,12 @@ def main():
                          "(multi-)step; orchestrated = host-side loop")
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="decode tokens per host round-trip (fused mode)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="mesh-parallel width (sharded KV pool + expert "
+                         "parallelism, bit-identical output — docs/"
+                         "sharded_serving.md).  Needs tp devices: on a "
+                         "CPU box set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) config — TPU slice required")
     ap.add_argument("--gateway", action="store_true",
@@ -65,7 +71,10 @@ def main():
         model=build_model(cfg),
         scheduler=Scheduler(policy=make_policy(args.policy)),
         n_slots=args.n_slots, max_seq_len=args.max_seq_len, seed=0,
-        step_mode=args.step_mode, decode_steps=args.decode_steps)
+        step_mode=args.step_mode, decode_steps=args.decode_steps,
+        tp=args.tp)
+    if engine.plan is not None:
+        print(f"mesh: {engine.sharding_report()}")
 
     rng = np.random.default_rng(0)
     t0 = time.monotonic()

@@ -113,6 +113,11 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
     zeros under the unnormalized-exp softmax), and batch rows are
     independent lanes — so the fused engine step can gather active slots
     into pow2 batch buckets without perturbing any real lane's logits.
+
+    Shard-invariant too: every einsum batches over the KV dim and
+    contracts only dh/sequence, so a pool sharded over kv-heads
+    (serving.sharded) computes per-shard slices of the identical GEMMs —
+    the mesh engine's bit-identity rests on this.
     """
     b = q.shape[0]
     n_pages, page, kvh, dh = k_pool.shape
@@ -164,9 +169,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     cursor — all S_max slots valid once wrapped).
     Returns (B, 1, H, dh).
 
-    The softmax reduction runs over the cache-sequence axis; when that axis
-    is sharded (MQA/low-KV models shard S over 'model'), GSPMD inserts the
-    partial-max/sum all-reduces — the LSE-combine flash-decode pattern.
+    Under the serving mesh the cache shards over KV (a batch dim of both
+    einsums — exact); the train/serve rule sets may instead shard S over
+    'model' for MQA/low-KV models, where GSPMD inserts the partial-max/sum
+    all-reduces — the LSE-combine flash-decode pattern.
     """
     b, s_max, kvh, dh = k_cache.shape
     h = q.shape[2]

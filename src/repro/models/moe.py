@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..sharding.context import constrain_expert_buf
+from ..sharding.context import constrain_expert_buf, gather_model
 from .layers import ParamSpec, mlp, mlp_template
 
 __all__ = ["moe_template", "moe_ffn"]
@@ -94,7 +94,10 @@ def moe_ffn(params, x, cfg, *, decode: bool = False):
     out_buf = constrain_expert_buf(
         _expert_mlp(params, buf, cfg.activation))               # (E, C, D)
 
-    picked = out_buf[eflat, safe_pos]                           # (N*K, D)
+    # under expert parallelism the pick is a gather whose off-shard
+    # contributions are exact zeros; gather_model then leaves the sharded
+    # regime so the K-way weighted sum runs replicated in a fixed order
+    picked = gather_model(out_buf[eflat, safe_pos])             # (N*K, D)
     w = (gates.reshape(-1) * keep).astype(picked.dtype)
     out = (picked * w[:, None]).reshape(N, K, D).sum(axis=1)
 

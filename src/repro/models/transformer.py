@@ -11,7 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..sharding.context import constrain_activations, constrain_heads
+from ..sharding.context import (constrain_activations, constrain_heads,
+                                gather_model)
 from .attention import decode_attention, decode_attention_paged, gqa_attention
 from .config import ModelConfig
 from .layers import (ParamSpec, apply_rope, attention_template, linear, mlp,
@@ -72,6 +73,43 @@ def decoder_template(cfg: ModelConfig):
 
 # ----------------------------------------------------------------- blocks
 
+def _wo_proj(cfg, p, o):
+    """Attention output projection, decomposed per kv-head group.
+
+    o: (B, S, H, dh) -> (B, S, D).  A single (H*dh)-long contraction fed
+    by an all-gathered ``o`` is NOT shard-stable: GSPMD rewrites
+    all-gather+dot into partial-dot+all-reduce (psum ordering), and even
+    a blocked gather leaves the GEMM consuming a collective's buffer,
+    whose layout steers the backend to a different accumulation order —
+    both flip the last bf16 bit, which MoE routing amplifies into token
+    divergence.  Instead: per-group partial dots (contraction never
+    crosses a group, so never crosses a shard), all-gather the f32
+    partials, then a fixed-order group sum on replicated data.  Under
+    the training rules (wo row-sharded over 'model', gather hook =
+    identity) the same code reduces over a sharded axis and GSPMD
+    emits the standard Megatron row-parallel psum.
+    """
+    b, s, h, dh = o.shape
+    g = cfg.n_kv_heads
+    w = p["wo"].reshape(g, (h // g) * dh, -1)
+    partial = jnp.einsum("bsgk,gkf->bsgf", o.reshape(b, s, g, (h // g) * dh),
+                         w, preferred_element_type=jnp.float32)
+    return gather_model(partial).sum(axis=2).astype(o.dtype)
+
+
+def _pin_qkv(q, k, v):
+    """Pin freshly projected (and rope'd) q/k/v to the serving context's
+    replicated layout (identity outside a serving context).  Without the
+    pin, the engine's KV-pool output constraints back-propagate through
+    the cache writes into the wq/wk/wv GEMMs, re-sharding their output
+    columns — and a column-split GEMM takes a different accumulation
+    path on the backend, wobbling the last bf16 bit (see decode_rules).
+    A user annotation stops the backward inference; sharded consumers
+    (the paged-attention einsums) slice these replicated values locally,
+    which is exact and collective-free."""
+    return gather_model(q), gather_model(k), gather_model(v)
+
+
 def _attn_seq(cfg, p, h, positions, *, window: int):
     """Full-sequence attention sub-block. Returns (out, (k, v))."""
     b, s, d = h.shape
@@ -81,9 +119,10 @@ def _attn_seq(cfg, p, h, positions, *, window: int):
     v = linear(p["wv"], h, p.get("bv")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = _pin_qkv(q, k, v)
     o = gqa_attention(q, k, v, causal=True, window=window, positions=positions)
     o = constrain_heads(o)
-    return linear(p["wo"], o.reshape(b, s, -1)), (k, v)
+    return _wo_proj(cfg, p, o), (k, v)
 
 
 def _dense_block_seq(cfg, p, h, positions, *, window: int, with_moe: bool):
@@ -258,12 +297,13 @@ def _attn_decode(cfg, p, h, k_cache, v_cache, cache_len, *, window: int):
     pos = cache_len[:, None]                              # (B,1) true position
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
+    q, k, v = _pin_qkv(q, k, v)
     s_max = k_cache.shape[1]
     write = cache_len % s_max if window > 0 else cache_len
     k_cache = _update_cache(k_cache, k, write)
     v_cache = _update_cache(v_cache, v, write)
     o = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window)
-    return linear(p["wo"], o.reshape(b, 1, -1)), k_cache, v_cache
+    return _wo_proj(cfg, p, o), k_cache, v_cache
 
 
 def decoder_decode_step(params, cfg: ModelConfig, token, cache, cache_len):
@@ -359,7 +399,10 @@ def decoder_decode_step(params, cfg: ModelConfig, token, cache, cache_len):
 
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    # vocab-sharded lm_head: column-parallel, no contraction over the
+    # sharded dim — the gather is a pure relayout, so sampling sees the
+    # exact single-device logits
+    logits = gather_model(jnp.einsum("bsd,dv->bsv", h, head))
     return logits, new_cache
 
 
@@ -422,6 +465,7 @@ def _attn_decode_paged(cfg, p, h, k_pool, v_pool, cache_len, block_tables,
     pos = cache_len[:, None]                              # (B,1) true position
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
+    q, k, v = _pin_qkv(q, k, v)
     logical = cache_len.astype(jnp.int32)
     phys = block_tables[jnp.arange(b), logical // page] * page \
         + logical % page                                  # (B,) flat token idx
@@ -432,7 +476,7 @@ def _attn_decode_paged(cfg, p, h, k_pool, v_pool, cache_len, block_tables,
         v[:, 0].astype(v_pool.dtype)).reshape(v_pool.shape)
     o = decode_attention_paged(q, k_pool, v_pool, block_tables,
                                cache_len + 1, window=window)
-    return linear(p["wo"], o.reshape(b, 1, -1)), k_pool, v_pool
+    return _wo_proj(cfg, p, o), k_pool, v_pool
 
 
 def decoder_decode_step_paged(params, cfg: ModelConfig, token, cache,
@@ -528,7 +572,10 @@ def decoder_decode_step_paged(params, cfg: ModelConfig, token, cache,
 
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    # vocab-sharded lm_head: column-parallel, no contraction over the
+    # sharded dim — the gather is a pure relayout, so sampling sees the
+    # exact single-device logits
+    logits = gather_model(jnp.einsum("bsd,dv->bsv", h, head))
     return logits, new_cache
 
 
@@ -569,11 +616,12 @@ def decoder_prefill_chunk(params, cfg: ModelConfig, tokens, past_k, past_v,
             b, c, acfg.n_kv_heads, acfg.head_dim)
         q = apply_rope(q, positions, acfg.rope_theta)
         k = apply_rope(k, positions, acfg.rope_theta)
+        q, k, v = _pin_qkv(q, k, v)
         kf = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
         vf = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
         o = gqa_attention(q, kf, vf, causal=True, window=window,
                           positions=positions, kv_positions=kv_positions)
-        return linear(p["wo"], o.reshape(b, c, -1)), (k, v)
+        return _wo_proj(acfg, p, o), (k, v)
 
     def block(acfg, lp, hh, pk, pv, *, with_moe):
         hh = constrain_activations(hh)

@@ -5,7 +5,8 @@ from .gateway import Gateway, GatewayConfig, Verdict
 from .kv_cache import KVCacheManager
 from .metrics import EngineMetrics
 from .request import RequestState, ServeRequest
+from .sharded import ShardingPlan
 
 __all__ = ["ServingEngine", "EngineStallError", "Gateway", "GatewayConfig",
            "Verdict", "KVCacheManager", "EngineMetrics", "RequestState",
-           "ServeRequest"]
+           "ServeRequest", "ShardingPlan"]

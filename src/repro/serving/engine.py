@@ -127,6 +127,15 @@ class ServingEngine:
     # benchmarks drive deadline storms deterministically with a virtual
     # clock instead of racing wall time.
     clock: Callable[[], float] = time.monotonic
+    # Mesh-parallel execution (repro.serving.sharded).  Pass a Mesh
+    # whose 'model' axis is the tensor/expert-parallel width, or just
+    # ``tp=N`` to build a local host-device mesh.  The default
+    # (mesh=None, tp=1) is the plain single-device path, unchanged.
+    # Sharded output is bit-identical to unsharded (exact decomposition
+    # — docs/sharded_serving.md), so every parity/selection invariant
+    # holds under the mesh too.
+    mesh: object | None = None
+    tp: int = 1
 
     _requests: dict[str, ServeRequest] = field(default_factory=dict)
     _running: list[str] = field(default_factory=list)
@@ -142,8 +151,24 @@ class ServingEngine:
             raise ValueError(
                 f"{self.model.cfg.family} models are not servable through "
                 "the paged engine")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        self.plan = None
+        if self.mesh is None and self.tp > 1:
+            from ..launch.mesh import make_local_mesh
+            self.mesh = make_local_mesh(tp=self.tp)
+        if self.mesh is not None:
+            from .sharded import ShardingPlan
+            self.plan = ShardingPlan.build(self.model, self.mesh)
+            if self.tp > 1 and self.tp != self.plan.tp:
+                raise ValueError(
+                    f"tp={self.tp} contradicts mesh model axis "
+                    f"{self.plan.tp}")
+            self.tp = self.plan.tp
         if self.params is None:
             self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        if self.plan is not None:
+            self.params = self.plan.place_params(self.params)
         self.kv = KVCacheManager(
             self.n_slots, self.max_seq_len, self.capacity_tokens,
             block_size=self.block_size,
@@ -154,6 +179,11 @@ class ServingEngine:
         self._rng = np.random.default_rng(self.seed)
         self._cache = self.model.init_paged_cache(
             self.kv.pool_blocks, self.block_size, self.n_slots)
+        if self.plan is not None:
+            # pool pages live per-shard from here on (split over the
+            # kv-head dim); the host-side block tables below stay
+            # authoritative and shard-agnostic
+            self._cache = self.plan.place_cache(self._cache)
         self._has_kv = "k" in self._cache
         self._max_pages = -(-self.max_seq_len // self.block_size)
         self._block_tables = np.full((self.n_slots, self._max_pages),
@@ -165,27 +195,44 @@ class ServingEngine:
         self._slot_rid: dict[int, str] = {}
         self._needs_grow: set[str] = set()
         page = self.block_size
-        self._decode_fn = jax.jit(
-            lambda p, t, c, cl, bt: self.model.decode_step_paged(
-                p, t, c, cl, bt, page_size=page),
-            donate_argnums=(2,))
-        self._prefill_fn = jax.jit(lambda p, b: self.model.prefill(p, b))
-        self._chunk_fn = jax.jit(
-            lambda p, t, pk, pv, s: self.model.prefill_chunk(p, t, pk, pv, s))
+        # plan-aware jit: on a mesh, traces run under the plan's hook
+        # context and cache-typed outputs are pinned back to the pool
+        # layout (cc / ckv below), which keeps the donated round-trips
+        # shard-stable; on the default path all three are identity/jax.jit
+        jit = jax.jit if self.plan is None else self.plan.wrap_jit
+        cc = (lambda c: c) if self.plan is None else self.plan.constrain_cache
+        ckv = (lambda x: x) if self.plan is None else self.plan.constrain_kv
 
-        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def decode_step(p, t, c, cl, bt):
+            logits, c2 = self.model.decode_step_paged(p, t, c, cl, bt,
+                                                      page_size=page)
+            return logits, cc(c2)
+
+        def prefill(p, b):
+            logits, c2 = self.model.prefill(p, b)
+            return logits, cc(c2)
+
+        def chunk(p, t, pk, pv, s):
+            k_c, v_c = self.model.prefill_chunk(p, t, pk, pv, s)
+            return ckv(k_c), ckv(v_c)
+
+        self._decode_fn = jit(decode_step, donate_argnums=(2,))
+        self._prefill_fn = jit(prefill)
+        self._chunk_fn = jit(chunk)
+
+        @functools.partial(jit, donate_argnums=(0, 1))
         def scatter(pk, pv, ks, vs, idx):
             fk = pk.reshape((pk.shape[0], -1) + pk.shape[3:])
             fv = pv.reshape((pv.shape[0], -1) + pv.shape[3:])
             fk = fk.at[:, idx].set(ks[:, 0].astype(fk.dtype))
             fv = fv.at[:, idx].set(vs[:, 0].astype(fv.dtype))
-            return fk.reshape(pk.shape), fv.reshape(pv.shape)
+            return ckv(fk.reshape(pk.shape)), ckv(fv.reshape(pv.shape))
 
-        @jax.jit
+        @jit
         def gather(pk, pv, idx):
             fk = pk.reshape((pk.shape[0], -1) + pk.shape[3:])
             fv = pv.reshape((pv.shape[0], -1) + pv.shape[3:])
-            return fk[:, None, idx], fv[:, None, idx]
+            return ckv(fk[:, None, idx]), ckv(fv[:, None, idx])
 
         self._scatter_fn = scatter
         self._gather_fn = gather
@@ -203,7 +250,7 @@ class ServingEngine:
         model = self.model
         base_key = jax.random.PRNGKey(self.seed)
 
-        @functools.partial(jax.jit,
+        @functools.partial(jit,
                            static_argnames=("n_steps", "all_greedy"),
                            donate_argnums=(1,))
         def fused_steps(params, cache, last, cl, tables, budgets, caps,
@@ -258,9 +305,12 @@ class ServingEngine:
                                                     jnp.int32))
             cache, last, cl, emitted, fin, buf = jax.lax.fori_loop(
                 0, n_steps, body, st0)
-            return buf, emitted, fin, cache
+            return buf, emitted, fin, cc(cache)
 
         self._fused_fn = fused_steps
+        # abstract (shape/dtype/sharding) args of the last fused call —
+        # lower_fused_hlo() re-lowers them for the roofline bench
+        self._last_fused_call = None
 
     # ------------------------------------------------------------ frontend
 
@@ -387,6 +437,14 @@ class ServingEngine:
         self._cache_len[slot] = payload["cache_len"]
         self._last_token[slot] = payload["last_token"]
         r.prefill_pos = payload["prefill_pos"]
+        # eager scatters above leave sharding propagation to XLA; re-pin
+        # the pool so the next jitted call sees the plan layout (no-op
+        # copy when it already matches, and always on the plain path)
+        self._commit_cache()
+
+    def _commit_cache(self) -> None:
+        if self.plan is not None:
+            self._cache = self.plan.place_cache(self._cache)
 
     def _preempt(self, r: ServeRequest) -> None:
         rid = r.request_id
@@ -637,6 +695,7 @@ class ServingEngine:
                 lambda big, small: big.at[:, slot].set(
                     small[:, 0].astype(big.dtype)),
                 self._cache["ssm"], cache["ssm"])
+            self._commit_cache()
         r.prefill_pos = len(ctx)
         self.metrics.prefill_chunks += 1
         self.metrics.prefill_tokens += len(ctx)
@@ -922,12 +981,25 @@ class ServingEngine:
             seeds[lane] = _rid_seed(rid)
             counters[lane] = r.generated
 
-        buf, emitted, fin, self._cache = self._fused_fn(
-            self.params, self._cache, jnp.asarray(last),
-            jnp.asarray(cl), jnp.asarray(tables), jnp.asarray(budgets),
-            jnp.asarray(caps), jnp.asarray(eos), jnp.asarray(temps),
-            jnp.asarray(seeds), jnp.asarray(counters), n_steps=n_steps,
-            all_greedy=bool((temps <= 0.0).all()))
+        dev_args = (self.params, self._cache, jnp.asarray(last),
+                    jnp.asarray(cl), jnp.asarray(tables),
+                    jnp.asarray(budgets), jnp.asarray(caps),
+                    jnp.asarray(eos), jnp.asarray(temps),
+                    jnp.asarray(seeds), jnp.asarray(counters))
+        static = dict(n_steps=n_steps,
+                      all_greedy=bool((temps <= 0.0).all()))
+        def _abs(a):
+            # host-built args (tokens, tables, budgets) carry a default
+            # single-device placement; on a mesh the stash must record
+            # them as replicated or a later re-lower sees a device-set
+            # mismatch against the mesh-sharded params/pool
+            sh = a.sharding
+            if self.plan is not None and len(sh.device_set) != \
+                    self.plan.mesh.size:
+                sh = self.plan.replicated
+            return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+        self._last_fused_call = (jax.tree.map(_abs, dev_args), static)
+        buf, emitted, fin, self._cache = self._fused_fn(*dev_args, **static)
         # the ONE batched device->host transfer for this (multi-)step
         buf, emitted, fin = jax.device_get((buf, emitted, fin))
         self.metrics.decode_iterations += n_steps
@@ -987,6 +1059,21 @@ class ServingEngine:
             else _ladder_size(self.n_slots, floor=8)
         return b_ladder * _ladder_size(self._max_pages, floor=4) \
             * n_steps_variants * 2
+
+    def lower_fused_hlo(self) -> str | None:
+        """Compiled HLO text of the most recent fused-step call (None
+        before any decode).  Re-lowers from the stashed abstract args —
+        shape/dtype/sharding only, so this is safe after donation — for
+        the roofline bench's ``collective_bytes`` accounting."""
+        if self._last_fused_call is None:
+            return None
+        abstract, static = self._last_fused_call
+        return self._fused_fn.lower(*abstract, **static).compile().as_text()
+
+    def sharding_report(self) -> dict | None:
+        """Per-component sharding outcome on this engine's mesh (None on
+        the single-device path) — see ShardingPlan.describe()."""
+        return None if self.plan is None else self.plan.describe()
 
     def stall_report(self) -> dict:
         """Live-state diagnosis: per-state request counts, queue depth,

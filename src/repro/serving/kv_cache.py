@@ -24,6 +24,13 @@ pool (the engine attaches the gathered KV arrays as an opaque *payload*),
 engine can restore the cache without re-prefilling.  Recompute-mode
 preemption is plain ``release`` (drop the KV, replay the context later).
 
+This manager is deliberately *mesh-agnostic* (docs/sharded_serving.md):
+under a sharded engine the physical pages stripe over the kv-head dim,
+but tables, refcounts, the prefix index, and swap accounting all stay
+host-side and authoritative — a payload is the gathered full-head array
+(gather/scatter of per-shard slices is a pure relayout), so payloads,
+and with them cluster migration, are mesh-width-agnostic.
+
 Prefix sharing (copy-on-write)
 ------------------------------
 Full blocks of *prompt* KV are content-addressed by a chain hash

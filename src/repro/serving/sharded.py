@@ -1,0 +1,172 @@
+"""Mesh-parallel serving execution: the sharded fused decode plan.
+
+``ShardingPlan`` turns the (previously dry-run-only) partitioning rules
+in ``repro.sharding.partitioning`` into a *serving* execution layout for
+one engine:
+
+  * a sharded paged KV pool — the (L, n_pages, page, KV, dh) tensors
+    split over the kv-head dim, so every physical page is striped
+    across shards while the page *grid* (and the host-side block tables
+    in ``KVCacheManager``, which stay fully authoritative) is
+    shard-invariant.  Swap payloads gather/scatter per-shard slices
+    transparently: a payload is the full-head numpy array, so swap-mode
+    preemption, CoW prefix sharing, and cluster migration are untouched.
+    The attention einsums inherit the pool's sharding and parallelize
+    over the kv-head batch dim — the decode bottleneck (pool bandwidth)
+    scales with the mesh;
+  * expert-parallel MoE — the (E, C, D) capacity buffer and per-expert
+    weights shard over 'model'; the router and the K-way weighted
+    combine stay replicated;
+  * replicated projections — wq/wk/wv, wo, mlp, lm_head/embed run
+    full-shape on every shard.
+
+The plan is deliberately *exact*: only batch-like einsum dims are
+sharded, so no floating-point contraction crosses a shard boundary and
+every per-slice GEMM keeps the exact shape it has in the unsharded
+program (see ``repro.sharding.partitioning.decode_rules`` for why
+column-/row-parallel projections forfeit bit-identity).  This makes the
+sharded engine bit-identical to the single-device one — the parity
+suite asserts token-identical streams, not tolerances.  Components
+whose dimensions don't divide the mesh axis fall back to replicated
+(correct, just not parallel) and are reported by ``describe()``.
+
+Execution model: jit + ``NamedSharding`` (GSPMD), not a hand-written
+``shard_map`` — the engine's host loop, global logical shapes, pow2
+bucket ladders, and buffer donation all carry over unchanged; the plan
+only (a) places params and pool once, (b) installs trace-scoped hooks
+(``gather_model`` / ``constrain_expert_buf``) around the engine's jit
+call sites, and (c) pins cache-typed jit outputs back to the pool
+layout so donation round-trips shard-stable.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..sharding.context import serving_sharding
+from ..sharding.partitioning import (decode_rules, named_shardings,
+                                     paged_kv_pool_spec, resolve_specs)
+
+__all__ = ["ShardingPlan"]
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    tp: int
+    rules: dict
+    report: dict
+    param_shardings: Any          # pytree of NamedSharding
+    kv_pool: NamedSharding        # (L, n_pages, page, KV, dh) layout
+    replicated: NamedSharding
+    expert_buf: NamedSharding | None
+
+    @classmethod
+    def build(cls, model, mesh: Mesh) -> "ShardingPlan":
+        """Resolve the exact serving-decode rules for ``model`` on
+        ``mesh`` (raises if any non-'model' axis is bigger than 1)."""
+        rules, report = decode_rules(model.cfg, mesh)
+        specs = resolve_specs(model.param_specs(), rules)
+        return cls(
+            mesh=mesh,
+            tp=int(mesh.shape["model"]),
+            rules=rules,
+            report=report,
+            param_shardings=named_shardings(mesh, specs),
+            kv_pool=NamedSharding(mesh, paged_kv_pool_spec(rules)),
+            replicated=NamedSharding(mesh, P()),
+            expert_buf=(NamedSharding(mesh, P("model", None, None))
+                        if rules.get("expert") else None),
+        )
+
+    # ------------------------------------------------------------ placement
+
+    def place_params(self, params):
+        return jax.device_put(params, self.param_shardings)
+
+    def place_cache(self, cache: dict) -> dict:
+        """Commit a paged-cache dict to the plan layout.  Also used to
+        re-pin the pool after eager host-side updates (swap restore)
+        whose sharding propagation is XLA's choice, not ours — a no-op
+        copy when the layout already matches."""
+        out = {}
+        for key, val in cache.items():
+            if key in ("k", "v"):
+                out[key] = jax.device_put(val, self.kv_pool)
+            else:
+                out[key] = jax.tree.map(
+                    lambda a: jax.device_put(a, self.replicated), val)
+        return out
+
+    # ------------------------------------------------- trace-time constraints
+
+    def gather(self, x):
+        """The ``gather_model`` hook body: all-gather the model-sharded
+        axis back to replicated (pure relayout, exact)."""
+        return jax.lax.with_sharding_constraint(x, self.replicated)
+
+    def constrain_kv(self, x):
+        """Pin a rank-5 (..., KV, dh) KV tensor — pool, prefill cache,
+        chunk output, or gathered prefix — to the kv-head sharding."""
+        return jax.lax.with_sharding_constraint(x, self.kv_pool)
+
+    def constrain_cache(self, cache: dict) -> dict:
+        """Pin a cache dict's outputs inside a traced function: k/v to
+        the pool layout, recurrent state replicated.  Keeps the donated
+        fused-step round-trip shard-stable (input sharding == output
+        sharding is what lets XLA alias the donated pool buffers)."""
+        out = {}
+        for key, val in cache.items():
+            if key in ("k", "v"):
+                out[key] = self.constrain_kv(val)
+            else:
+                out[key] = jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(
+                        a, self.replicated), val)
+        return out
+
+    def context(self):
+        """Trace-scoped hook installation (see sharding.context): only
+        the engine's own jit calls see the constraints, so unsharded
+        engines in the same process are unaffected."""
+        return serving_sharding(self.gather, self.expert_buf)
+
+    def wrap_jit(self, fn, **jit_kwargs):
+        """jax.jit that traces under ``context()``.  Forwards the
+        private compile counter and ``lower`` so the engine's
+        compile-bound checks and the roofline bench's HLO dump work
+        identically on the wrapped function."""
+        jitted = jax.jit(fn, **jit_kwargs)
+        plan = self
+
+        @functools.wraps(fn)
+        def call(*args, **kwargs):
+            with plan.context():
+                return jitted(*args, **kwargs)
+
+        def lower(*args, **kwargs):
+            # lowering must trace under the same hooks as execution or
+            # the dumped HLO loses the sharding constraints (and with
+            # them the collectives the roofline bench prices)
+            with plan.context():
+                return jitted.lower(*args, **kwargs)
+
+        call._cache_size = getattr(jitted, "_cache_size", None)
+        call.lower = lower
+        return call
+
+    # -------------------------------------------------------------- reporting
+
+    def describe(self) -> dict:
+        """What actually sharded (per component) on this mesh — the
+        divisibility fallbacks make this the source of truth, not the
+        requested tp."""
+        n_dev = 1
+        for a in self.mesh.axis_names:
+            n_dev *= int(self.mesh.shape[a])
+        return {"devices": n_dev, "tp": self.tp, **self.report}

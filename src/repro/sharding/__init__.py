@@ -1,10 +1,12 @@
 """Sharding rules: logical axes -> mesh PartitionSpecs + activation hook."""
 
-from .context import activation_sharding, constrain_activations
-from .partitioning import (batch_axes, kv_cache_spec, logits_spec,
-                           named_shardings, resolve_specs, rules_for,
-                           ssm_state_spec)
+from .context import (activation_sharding, constrain_activations,
+                      gather_model, serving_sharding)
+from .partitioning import (batch_axes, decode_rules, kv_cache_spec,
+                           logits_spec, named_shardings, paged_kv_pool_spec,
+                           resolve_specs, rules_for, ssm_state_spec)
 
 __all__ = ["activation_sharding", "constrain_activations", "batch_axes",
-           "kv_cache_spec", "logits_spec", "named_shardings",
-           "resolve_specs", "rules_for", "ssm_state_spec"]
+           "decode_rules", "gather_model", "kv_cache_spec", "logits_spec",
+           "named_shardings", "paged_kv_pool_spec", "resolve_specs",
+           "rules_for", "serving_sharding", "ssm_state_spec"]

@@ -16,7 +16,8 @@ import jax
 
 _state = threading.local()
 
-__all__ = ["constrain_activations", "activation_sharding"]
+__all__ = ["constrain_activations", "activation_sharding",
+           "gather_model", "serving_sharding"]
 
 
 def constrain_activations(h):
@@ -68,6 +69,42 @@ def constrain_expert_buf(x):
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def gather_model(x):
+    """Force a model-sharded activation back to replicated.
+
+    Identity by default.  The serving sharded-decode plan installs a
+    with_sharding_constraint(P()) here at the points where the exact
+    (bit-identical) tensor-parallel decomposition must leave the sharded
+    regime: before the attention output projection, after the MoE
+    capacity-buffer pick, and on the final logits.  Every collective this
+    inserts is a pure all-gather (relayout, no arithmetic), which is what
+    keeps the sharded engine bit-identical to the single-device one —
+    see docs/sharded_serving.md."""
+    fn = getattr(_state, "gather_fn", None)
+    if fn is None:
+        return x
+    return fn(x)
+
+
+@contextlib.contextmanager
+def serving_sharding(gather_fn, expert_spec=None):
+    """Install the serving-decode hooks around a jit trace: ``gather_fn``
+    backs ``gather_model``; ``expert_spec`` (optional) backs
+    ``constrain_expert_buf`` so the MoE capacity buffer stays
+    expert-sharded.  Scoped: the engine enters this only around its jit
+    call sites, so plain single-device engines in the same process never
+    see the constraints."""
+    prev_g = getattr(_state, "gather_fn", None)
+    prev_e = getattr(_state, "expert_spec", None)
+    _state.gather_fn = gather_fn
+    _state.expert_spec = expert_spec
+    try:
+        yield
+    finally:
+        _state.gather_fn = prev_g
+        _state.expert_spec = prev_e
 
 
 @contextlib.contextmanager

@@ -26,7 +26,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["rules_for", "resolve_specs", "batch_axes", "kv_cache_spec",
-           "ssm_state_spec", "logits_spec", "named_shardings"]
+           "ssm_state_spec", "logits_spec", "named_shardings",
+           "decode_rules", "paged_kv_pool_spec"]
 
 
 def _mesh_axes(mesh: Mesh) -> tuple:
@@ -59,6 +60,7 @@ def rules_for(cfg, mode: str, mesh: Mesh) -> dict:
     rules = {
         "vocab": model_ax,
         "heads": model_ax,
+        "heads_out": model_ax,       # Megatron row-parallel wo (psum after)
         "kv": model_ax if kv_shardable else None,
         "mlp": model_ax,
         "expert": model_ax,
@@ -79,6 +81,89 @@ def rules_for(cfg, mode: str, mesh: Mesh) -> dict:
     if mode == "serve_big":
         rules["embed"] = "data"
     return rules
+
+
+def decode_rules(cfg, mesh: Mesh, axis: str = "model"):
+    """Exact (bit-identical) serving-decode rule set.
+
+    Returns ``(rules, report)``.  Unlike ``rules_for``'s train/serve
+    modes, this set shards ONLY batch-like einsum dimensions — axes that
+    no floating-point contraction ever crosses AND whose split leaves
+    every per-slice GEMM the same shape as in the unsharded program:
+
+      * the paged KV pool (and with it the attention einsums) over the
+        kv-head dim — scores/values contract over head_dim and sequence,
+        both shard-local, and each (batch, kv-head) slice is an
+        identically-shaped GEMM;
+      * expert weights and the (E, C, D) capacity buffer over E — the
+        expert FFN einsums batch over E, one identically-shaped GEMM per
+        expert;
+      * the wo projection via its per-kv-group decomposition
+        (models.transformer._wo_proj) — partial dots batch over groups,
+        the cross-group sum runs post-gather in a fixed order.
+
+    Everything else — wq/wk/wv, lm_head/embed, mlp, router, ssm —
+    stays REPLICATED, deliberately: splitting a GEMM's output (column
+    parallel) or contraction (row parallel / psum) dimension changes the
+    backend's accumulation path, and the resulting last-ulp float drift
+    is amplified into token divergence by discrete MoE routing and
+    sampling thresholds.  Replicated projections recompute identical
+    full-shape GEMMs on every shard; their outputs are sliced locally
+    (exact, no collective) where a sharded consumer needs them.  This is
+    the exactness/efficiency dial: flip these axes to ``axis`` (as the
+    train/serve rules do) to parallelize the projection FLOPs at the
+    cost of bit-identity.
+
+    Any component whose dimension does not divide the mesh axis falls
+    back to replicated (still correct, just not sharded) and is flagged
+    in ``report`` so callers can surface the degradation.  The pool's
+    mesh axis travels in the extra ``"pool_kv"`` rule key (not a
+    parameter axis name — see ``paged_kv_pool_spec``).
+    """
+    tp = mesh.shape[axis]
+    for a in mesh.axis_names:
+        if a != axis and mesh.shape[a] != 1:
+            raise ValueError(
+                f"decode_rules: non-'{axis}' mesh axis {a!r} has size "
+                f"{mesh.shape[a]} — the serving engine manages the batch "
+                "host-side and only shards over the model axis")
+    heads_ok = cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0
+    expert_ok = cfg.n_experts % tp == 0 if cfg.family == "moe" else False
+    rules = {
+        "vocab": None,
+        "heads": None,
+        "heads_out": None,
+        "kv": None,
+        "mlp": None,
+        "expert": axis if expert_ok else None,
+        "expert_mlp": None,
+        "router": None,
+        "ssm_inner": None,
+        "embed": None,
+        "layers": None,
+        None: None,
+        "pool_kv": axis if heads_ok else None,
+    }
+    report = {
+        "tp": tp,
+        "attention": "sharded" if heads_ok else "replicated",
+        "experts": ("sharded" if expert_ok else "replicated")
+        if cfg.family == "moe" else "n/a",
+        "vocab": "replicated",
+        "mlp": "replicated",
+        "ssm": "replicated" if cfg.family in ("ssm", "hybrid") else "n/a",
+    }
+    return rules, report
+
+
+def paged_kv_pool_spec(rules: dict):
+    """PartitionSpec for the (L, n_pages, page, KV, dh) paged KV pool:
+    physical pages shard over the kv-head dim; the page grid itself (and
+    the host-side block tables indexing it) stays shard-invariant.  Keyed
+    by ``"pool_kv"`` rather than the ``"kv"`` parameter axis: the wk/wv
+    *weights* stay replicated under ``decode_rules`` while the pool they
+    feed is sharded (the write is a local slice of the full-head k/v)."""
+    return P(None, None, None, rules.get("pool_kv"), None)
 
 
 def resolve_specs(spec_tree, rules: dict):
