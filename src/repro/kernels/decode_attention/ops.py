@@ -8,11 +8,14 @@ import jax
 import jax.numpy as jnp
 
 from ..bucketing import pow2_bucket
-from .kernel import decode_attention_kernel, decode_attention_paged_kernel
-from .ref import (decode_attention_paged_reference,
+from .kernel import (decode_attention_kernel, decode_attention_paged_kernel,
+                     decode_attention_paged_lse_kernel)
+from .ref import (decode_attention_paged_lse_reference,
+                  decode_attention_paged_reference,
                   decode_attention_reference)
 
-__all__ = ["decode_attention_op", "decode_attention_paged_op"]
+__all__ = ["decode_attention_op", "decode_attention_paged_op",
+           "decode_attention_paged_lse_op"]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s",
@@ -66,5 +69,33 @@ def decode_attention_paged_op(q, k_pool, v_pool, block_tables, cache_len, *,
     if pb != p_max:
         block_tables = jnp.pad(block_tables, ((0, 0), (0, pb - p_max)))
     return decode_attention_paged_kernel(
+        q, k_pool, v_pool, block_tables.astype(jnp.int32),
+        cache_len.astype(jnp.int32), window=window, interpret=not native)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "force_pallas"))
+def decode_attention_paged_lse_op(q, k_pool, v_pool, block_tables,
+                                  cache_len, *, window: int = 0,
+                                  force_pallas: bool = False):
+    """Partial paged flash-decode returning ``(out, lse)``.
+
+    Same operands and padding contract as ``decode_attention_paged_op``,
+    but ``out`` is normalized over only the pages reachable through THIS
+    call's block tables and ``lse`` (B, H) f32 is their log-sum-exp.
+    This is the per-stripe building block for LSE-combined sharded
+    attention: when kv heads don't divide the mesh, each shard runs this
+    op over its stripe of the logical page axis and the partials merge
+    exactly via ``models.attention.combine_lse_partials`` — the same
+    split-KV reduction the kernel already does across its grid, lifted
+    one level up so GSPMD can place the final combine as a collective."""
+    native = jax.default_backend() == "tpu"
+    if not native and not force_pallas:
+        return decode_attention_paged_lse_reference(
+            q, k_pool, v_pool, block_tables, cache_len, window=window)
+    p_max = block_tables.shape[1]
+    pb = pow2_bucket(p_max)
+    if pb != p_max:
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pb - p_max)))
+    return decode_attention_paged_lse_kernel(
         q, k_pool, v_pool, block_tables.astype(jnp.int32),
         cache_len.astype(jnp.int32), window=window, interpret=not native)

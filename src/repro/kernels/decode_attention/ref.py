@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["decode_attention_reference", "decode_attention_paged_reference"]
+__all__ = ["decode_attention_reference", "decode_attention_paged_reference",
+           "decode_attention_paged_lse_reference"]
 
 
 def decode_attention_reference(q, k_cache, v_cache, cache_len, *,
@@ -61,3 +62,36 @@ def decode_attention_paged_reference(q, k_pool, v_pool, block_tables,
     p = p / p.sum(-1, keepdims=True)
     out = jnp.einsum("bhs,bshd->bhd", p, vv.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def decode_attention_paged_lse_reference(q, k_pool, v_pool, block_tables,
+                                         cache_len, *, window: int = 0):
+    """(out, lse) oracle: the paged reference plus the f32 log-sum-exp
+    of the masked scores, matching the conventions of
+    ``models.attention.combine_lse_partials`` (a fully-masked call
+    yields lse ≈ -1e30 so its merge weight is exactly 0)."""
+    b, h, dh = q.shape
+    n_pages, page, kv, _ = k_pool.shape
+    p_max = block_tables.shape[1]
+    s_log = p_max * page
+    tok = (block_tables.astype(jnp.int32) * page)[:, :, None] \
+        + jnp.arange(page, dtype=jnp.int32)[None, None, :]
+    tok = tok.reshape(b, s_log)
+    k = k_pool.reshape(n_pages * page, kv, dh)[tok]
+    v = v_pool.reshape(n_pages * page, kv, dh)[tok]
+    rep = h // kv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * dh ** -0.5
+    idx = jnp.arange(s_log)
+    valid = idx[None, :] < cache_len[:, None]
+    if window > 0:
+        valid &= idx[None, :] >= cache_len[:, None] - window
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    m = scores.max(-1)                              # (B, H)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.maximum(p.sum(-1), 1e-30)
+    out = jnp.einsum("bhs,bshd->bhd", p / l[..., None],
+                     vv.astype(jnp.float32))
+    return out.astype(q.dtype), m + jnp.log(l)

@@ -230,6 +230,73 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+# ---------------------------------------------------- serving min-tp report
+
+MIN_TP_ARCHS = ("deepseek-moe-16b", "nemotron-4-340b")
+
+
+def min_tp_report(archs=MIN_TP_ARCHS, *, n_slots: int = 64,
+                  max_seq_len: int = 4096, page_size: int = 16,
+                  max_tp: int = 256) -> dict:
+    """Smallest serving width that fits one shard per chip, per arch and
+    per parallel mode — priced by ``serving.sharded.estimate_device_bytes``
+    (pure template arithmetic, no allocation, no compile), so sweeping a
+    pow2 tp ladder over 340B-param configs is instant.
+
+    The exact-vs-efficient gap IS the report's point: exact mode
+    replicates every Megatron weight, so its min tp is set by the full
+    parameter footprint; efficient mode divides the projections too and
+    typically fits several rungs earlier."""
+    from ..serving.sharded import estimate_device_bytes
+    out = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        n_pages = n_slots * (-(-max_seq_len // page_size)) + 1  # + scratch
+        rec = {}
+        for parallel in ("exact", "efficient"):
+            ladder, fit = [], None
+            tp = 1
+            while tp <= max_tp:
+                est = estimate_device_bytes(
+                    model, tp=tp, parallel=parallel, n_pages=n_pages,
+                    page_size=page_size, n_slots=n_slots)
+                fits = est["total_bytes"] <= HW["hbm_bytes"]
+                ladder.append({
+                    "tp": tp, "fits": fits,
+                    "total_gib": round(est["total_bytes"] / 2**30, 2),
+                    "weights_gib": round(est["weights_bytes"] / 2**30, 2),
+                    "kv_pool_gib": round(est["kv_pool_bytes"] / 2**30, 2),
+                    "replicated_gib":
+                        round(est["replicated_bytes"] / 2**30, 2),
+                    "fallbacks": list(est["report"]["fallbacks"]),
+                })
+                if fit is None and fits:
+                    fit = tp
+                tp *= 2
+            rec[parallel] = {"min_tp": fit, "ladder": ladder}
+        out[arch] = rec
+    return out
+
+
+def print_min_tp(report: dict) -> None:
+    hbm = HW["hbm_bytes"] / 2**30
+    print(f"serving min-tp report (HBM budget {hbm:.0f} GiB/chip, "
+          f"64 slots x 4k ctx KV pool):")
+    for arch, rec in report.items():
+        for parallel, r in rec.items():
+            print(f"  {arch:18s} {parallel:9s} min_tp={r['min_tp']}")
+            for rung in r["ladder"]:
+                mark = "fits" if rung["fits"] else "OOM "
+                print(f"    tp={rung['tp']:<4d} {mark} "
+                      f"total={rung['total_gib']:8.2f} GiB "
+                      f"(weights {rung['weights_gib']:.2f}, "
+                      f"kv {rung['kv_pool_gib']:.2f}, "
+                      f"replicated {rung['replicated_gib']:.2f})"
+                      + (f" fallbacks={rung['fallbacks']}"
+                         if rung["fallbacks"] else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -238,8 +305,20 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="sweep every (arch x shape x mesh)")
     ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--min-tp", action="store_true",
+                    help="serving min-tp report (deepseek-moe-16b + "
+                         "nemotron-4-340b, exact vs efficient) instead "
+                         "of lowering cases")
     ap.add_argument("--out", default="dryrun_results.json")
     args = ap.parse_args()
+
+    if args.min_tp:
+        report = min_tp_report(
+            (args.arch,) if args.arch else MIN_TP_ARCHS)
+        print_min_tp(report)
+        with open(args.out, "w") as f:
+            json.dump({"min_tp": report}, f, indent=1)
+        return
 
     results = {}
     if os.path.exists(args.out):

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import re
 
-__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
+           "decode_flop_split"]
 
 HW = {
     "peak_flops": 197e12,      # bf16 / chip (TPU v5e)
@@ -157,3 +158,70 @@ def model_flops(cfg, shape, n_chips: int) -> float:
         tokens = shape.global_batch
         mult = 2.0
     return mult * n_active * tokens / n_chips
+
+
+def decode_flop_split(cfg, *, tp: int, parallel: str, batch: int,
+                      s_cache: int) -> dict:
+    """Per-decode-step FLOP accounting split by placement: which
+    component FLOPs the rule table actually divides over the mesh
+    ("off-replica") vs what every device repeats ("replicated").
+
+    This is the deterministic half of the exact-vs-efficient benchmark:
+    wall-clock on a host-device testbed is noise, but the partitioner's
+    placement is a pure function of the rule table, so the claim
+    "efficient moves >= 2x more FLOPs off-replica than exact at tp=4"
+    is assertable in CI.  ``off_replica`` is the per-device work each
+    sharded component *sheds* relative to running replicated:
+    component_flops * (1 - 1/tp).
+    """
+    from ..sharding.partitioning import decode_rule_table
+    rules, report = decode_rule_table(cfg, tp, parallel=parallel)
+    D, dh = cfg.d_model, cfg.head_dim
+    H, KV, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    gate = 3 if cfg.activation == "swiglu" else 2
+
+    # (flops per token, sharded?) per component
+    comp = {
+        "qkv_proj": (2.0 * D * (H + 2 * KV) * dh * L,
+                     rules.get("heads") is not None),
+        "wo_proj": (2.0 * H * dh * D * L,
+                    rules.get("heads_out") is not None),
+        # scores + weighted sum over the cache; lse-split stripes the
+        # page axis, so attention compute divides even when the kv-head
+        # sharding fell back
+        "attention": (4.0 * H * dh * s_cache * L,
+                      rules.get("pool_kv") is not None
+                      or report["attention"] == "lse-split"),
+        "lm_head": (2.0 * D * cfg.padded_vocab,
+                    rules.get("vocab") is not None),
+    }
+    if cfg.family == "moe":
+        moe_layers = L - cfg.first_k_dense
+        routed = (2.0 * gate * D * cfg.moe_d_ff * cfg.experts_per_token
+                  * moe_layers)
+        shared = (2.0 * gate * D * cfg.moe_d_ff * cfg.n_shared_experts
+                  * moe_layers)
+        comp["moe_routed"] = (routed, rules.get("expert") is not None)
+        # shared experts are a plain MLP — they follow the mlp axis
+        comp["moe_shared"] = (shared, rules.get("mlp") is not None)
+        if cfg.first_k_dense:
+            dff = cfg.dense_d_ff or cfg.d_ff
+            comp["mlp"] = (2.0 * gate * D * dff * cfg.first_k_dense,
+                           rules.get("mlp") is not None)
+    else:
+        comp["mlp"] = (2.0 * gate * D * cfg.d_ff * L,
+                       rules.get("mlp") is not None)
+
+    total = sum(f for f, _ in comp.values()) * batch
+    sharded = sum(f for f, s in comp.values() if s) * batch
+    off = sharded * (1.0 - 1.0 / max(1, tp))
+    return {
+        "tp": tp, "parallel": parallel,
+        "total_flops": total,
+        "sharded_flops": sharded,
+        "replicated_flops": total - sharded,
+        "off_replica_flops": off,
+        "per_device_flops": total - off,
+        "components": {k: {"flops": f * batch, "sharded": s}
+                       for k, (f, s) in comp.items()},
+    }

@@ -40,6 +40,17 @@ def main():
                          "sharded_serving.md).  Needs tp devices: on a "
                          "CPU box set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--parallel", default="exact",
+                    choices=("exact", "efficient"),
+                    help="exact = bit-identical sharding (KV pool + "
+                         "experts only); efficient = Megatron column/row-"
+                         "parallel projections + vocab-sharded lm_head + "
+                         "LSE-split attention, tolerance-based parity "
+                         "(docs/sharded_serving.md 'Efficient mode')")
+    ap.add_argument("--device-memory-gb", type=float, default=None,
+                    help="per-device HBM budget for the build-time memory "
+                         "preflight (refuses configs that cannot fit one "
+                         "shard; default: no check)")
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) config — TPU slice required")
     ap.add_argument("--gateway", action="store_true",
@@ -72,7 +83,8 @@ def main():
         scheduler=Scheduler(policy=make_policy(args.policy)),
         n_slots=args.n_slots, max_seq_len=args.max_seq_len, seed=0,
         step_mode=args.step_mode, decode_steps=args.decode_steps,
-        tp=args.tp)
+        tp=args.tp, parallel=args.parallel,
+        device_memory_gb=args.device_memory_gb)
     if engine.plan is not None:
         print(f"mesh: {engine.sharding_report()}")
 

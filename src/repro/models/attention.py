@@ -14,9 +14,37 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["gqa_attention", "decode_attention", "decode_attention_paged",
-           "encoder_attention"]
+           "encoder_attention", "combine_lse_partials"]
 
 _NEG = -1e30
+
+
+def combine_lse_partials(outs, lses, axis: int = 0):
+    """Merge flash-style partial attention results along ``axis``.
+
+    ``outs``: stacked *normalized* partial outputs (each partial is
+    softmax-complete over its own KV stripe), with a trailing head_dim
+    axis; ``lses``: the matching log-sum-exp values, shaped like
+    ``outs`` minus that trailing axis.  The merged result equals the
+    softmax over the union of the stripes (up to f32 reassociation):
+
+        w_i = exp(lse_i - max_j lse_j);  out = sum_i w_i out_i / sum_i w_i
+
+    An all-masked stripe contributes lse = log(l) + m ~ -inf and weight
+    exactly 0.  This is the reduction the sharded paged-decode path and
+    the Pallas ``(out, lse)`` kernel variant share — the property test
+    in tests/test_tolerance.py pins merge == dense softmax.
+    """
+    m = jax.lax.stop_gradient(lses).max(axis=axis, keepdims=True)
+    # clamp: if every stripe is empty (lse = -inf everywhere) the merge
+    # must return 0, not NaN
+    m = jnp.maximum(m, _NEG)
+    w = jnp.exp(lses - m)                       # (..., n, ...)
+    den = jnp.maximum(w.sum(axis=axis), 1e-30)
+    num = (outs * jnp.expand_dims(w, -1)).sum(axis=axis)
+    out = num / jnp.expand_dims(den, -1)
+    lse = jnp.squeeze(m, axis) + jnp.log(den)
+    return out, lse
 
 
 def _repeat_kv(k, n_rep: int):
@@ -94,7 +122,8 @@ def gqa_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
-                           window: int = 0):
+                           window: int = 0, n_splits: int = 1,
+                           constrain_split=None):
     """One-token decode attention over a *paged* KV pool (vLLM block-table
     indirection, jnp twin of repro.kernels.decode_attention's paged
     kernel).
@@ -118,7 +147,23 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
     contracts only dh/sequence, so a pool sharded over kv-heads
     (serving.sharded) computes per-shard slices of the identical GEMMs —
     the mesh engine's bit-identity rests on this.
+
+    ``n_splits > 1`` (the efficient-mode LSE fallback, installed via
+    ``sharding.context`` when kv heads don't divide the mesh) splits the
+    *logical page* axis into ``n_splits`` stripes: each stripe runs its
+    own softmax to flash-style (m, l, acc) partials and the stripes
+    merge by log-sum-exp combining — numerically the
+    ``combine_lse_partials`` reduction.  ``constrain_split`` (optional)
+    pins the stripe axis to the mesh so GSPMD assigns stripe i to shard
+    i and the merge lowers to one small psum over (m, l, acc)-sized
+    tensors instead of replicating the pool gather.  NOT bit-identical
+    to the unsplit path (different reduction order) — tolerance
+    contract applies.
     """
+    if n_splits > 1:
+        return _decode_attention_paged_split(
+            q, k_pool, v_pool, block_tables, cache_len, window=window,
+            n_splits=n_splits, constrain_split=constrain_split)
     b = q.shape[0]
     n_pages, page, kvh, dh = k_pool.shape
     h = q.shape[2]
@@ -148,6 +193,63 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, cache_len, *,
     out = jnp.einsum("bqkrs,bskd->bqkrd", p, v,
                      preferred_element_type=jnp.float32)
     out = out / jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def _decode_attention_paged_split(q, k_pool, v_pool, block_tables,
+                                  cache_len, *, window: int,
+                                  n_splits: int, constrain_split):
+    """LSE page-split paged decode: stripe s owns logical pages
+    [s*P/n, (s+1)*P/n), computes flash-style (m, l, acc) partials over
+    its stripe, and the stripes merge via log-sum-exp combining.  The
+    jnp twin of running the Pallas ``(out, lse)`` kernel variant per
+    stripe and reducing with ``combine_lse_partials``."""
+    b = q.shape[0]
+    n_pages, page, kvh, dh = k_pool.shape
+    h = q.shape[2]
+    rep = h // kvh
+    p_max = block_tables.shape[1]
+    scale = dh ** -0.5
+    pad = (-p_max) % n_splits
+    if pad:
+        # scratch-page rows past every cache_len — masked like any other
+        # tail padding
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad)))
+    pp = p_max + pad
+    per = pp // n_splits                 # logical pages per stripe
+    s_per = per * page                   # tokens per stripe
+    tok = (block_tables.astype(jnp.int32) * page)[:, :, None] \
+        + jnp.arange(page, dtype=jnp.int32)[None, None, :]  # (B, pp, page)
+    tok = tok.reshape(b, n_splits, s_per)
+    if constrain_split is not None:
+        # stripe axis -> 'model': the gather below pulls only this
+        # shard's stripe from the (replicated-fallback) pool, and the
+        # final stripe reduction becomes the cross-shard LSE combine
+        tok = constrain_split(tok)
+    k = k_pool.reshape(n_pages * page, kvh, dh)[tok]   # (B, n, S, KV, dh)
+    v = v_pool.reshape(n_pages * page, kvh, dh)[tok]
+    qg = q.reshape(b, 1, kvh, rep, dh)
+    scores = jnp.einsum("bqkrd,bnskd->bnqkrs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    idx = (jnp.arange(n_splits) * s_per)[None, :, None] \
+        + jnp.arange(s_per)[None, None, :]             # (1, n, S) global pos
+    valid = idx < cache_len[:, None, None]
+    if window > 0:
+        valid &= idx >= cache_len[:, None, None] - window
+    scores = jnp.where(valid[:, :, None, None, None, :], scores, _NEG)
+    # per-stripe flash partials (m, l, acc), then the LSE merge over the
+    # stripe axis — same reduction as combine_lse_partials, kept in
+    # unnormalized (l, acc) form to skip one divide
+    m = scores.max(axis=-1)                            # (B, n, 1, KV, rep)
+    p = jnp.exp(scores - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bnqkrs,bnskd->bnqkrd", p, v,
+                     preferred_element_type=jnp.float32)
+    m_tot = m.max(axis=1, keepdims=True)               # (B, 1, 1, KV, rep)
+    w = jnp.exp(m - m_tot)
+    l_tot = (l * w).sum(axis=1)                        # (B, 1, KV, rep)
+    acc_tot = (acc * w[..., None]).sum(axis=1)
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 

@@ -85,8 +85,9 @@ def attention_template(cfg, layers: int | None = None, bias: bool | None = None)
         "wq": ParamSpec(L + (D, H * dh), jnp.bfloat16, la + ("embed", "heads")),
         "wk": ParamSpec(L + (D, KV * dh), jnp.bfloat16, la + ("embed", "kv")),
         "wv": ParamSpec(L + (D, KV * dh), jnp.bfloat16, la + ("embed", "kv")),
-        # wo's input dim gets its own logical axis: training shards it
-        # over 'model' (Megatron row-parallel, psum after), but the exact
+        # wo's input dim gets its own logical axis: training and the
+        # serving engine's parallel="efficient" rules shard it over
+        # 'model' (Megatron row-parallel, psum after), but the exact
         # serving-decode rules must keep wo replicated — a row-parallel
         # output projection forces a psum of partial sums, whose
         # reduction order breaks bit-identity with the unsharded engine.

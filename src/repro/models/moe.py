@@ -95,8 +95,13 @@ def moe_ffn(params, x, cfg, *, decode: bool = False):
         _expert_mlp(params, buf, cfg.activation))               # (E, C, D)
 
     # under expert parallelism the pick is a gather whose off-shard
-    # contributions are exact zeros; gather_model then leaves the sharded
-    # regime so the K-way weighted sum runs replicated in a fixed order
+    # contributions are exact zeros; in exact serving mode gather_model
+    # then leaves the sharded regime so the K-way weighted sum runs
+    # replicated in a fixed order.  In efficient mode the hook is the
+    # identity: GSPMD lowers the pick itself to the cross-shard gather
+    # and the weighted sum's order is whatever the partitioner picks —
+    # part of why efficient mode is tolerance-based, not bit-identical
+    # (routing flips amplify last-ulp drift; docs/sharded_serving.md)
     picked = gather_model(out_buf[eflat, safe_pos])             # (N*K, D)
     w = (gates.reshape(-1) * keep).astype(picked.dtype)
     out = (picked * w[:, None]).reshape(N, K, D).sum(axis=1)

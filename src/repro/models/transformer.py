@@ -11,7 +11,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..sharding.context import (constrain_activations, constrain_heads,
+from ..sharding.context import (attn_split_count, constrain_activations,
+                                constrain_attn_split, constrain_heads,
+                                constrain_kv_heads, constrain_q_heads,
                                 gather_model)
 from .attention import decode_attention, decode_attention_paged, gqa_attention
 from .config import ModelConfig
@@ -85,9 +87,12 @@ def _wo_proj(cfg, p, o):
     divergence.  Instead: per-group partial dots (contraction never
     crosses a group, so never crosses a shard), all-gather the f32
     partials, then a fixed-order group sum on replicated data.  Under
-    the training rules (wo row-sharded over 'model', gather hook =
-    identity) the same code reduces over a sharded axis and GSPMD
-    emits the standard Megatron row-parallel psum.
+    the training rules — and the serving engine's
+    ``parallel="efficient"`` plan (wo row-sharded over 'model', gather
+    hook = identity) — the same code reduces over a sharded axis and
+    GSPMD emits the standard Megatron row-parallel psum: the "single
+    psum per block" of the efficient decode plan falls out of this
+    decomposition for free.
     """
     b, s, h, dh = o.shape
     g = cfg.n_kv_heads
@@ -99,14 +104,25 @@ def _wo_proj(cfg, p, o):
 
 def _pin_qkv(q, k, v):
     """Pin freshly projected (and rope'd) q/k/v to the serving context's
-    replicated layout (identity outside a serving context).  Without the
-    pin, the engine's KV-pool output constraints back-propagate through
-    the cache writes into the wq/wk/wv GEMMs, re-sharding their output
-    columns — and a column-split GEMM takes a different accumulation
-    path on the backend, wobbling the last bf16 bit (see decode_rules).
-    A user annotation stops the backward inference; sharded consumers
-    (the paged-attention einsums) slice these replicated values locally,
-    which is exact and collective-free."""
+    layout (identity outside a serving context).
+
+    Exact mode: pin REPLICATED (``gather_model`` is a P() constraint).
+    Without the pin, the engine's KV-pool output constraints
+    back-propagate through the cache writes into the wq/wk/wv GEMMs,
+    re-sharding their output columns — and a column-split GEMM takes a
+    different accumulation path on the backend, wobbling the last bf16
+    bit (see decode_rule_table).  A user annotation stops the backward
+    inference; sharded consumers (the paged-attention einsums) slice
+    these replicated values locally, which is exact and collective-free.
+
+    Efficient mode: ``gather_model`` is the identity and the
+    ``constrain_*_heads`` hooks pin q/k/v HEAD-SHARDED instead — the
+    column-parallel wq/wk/wv outputs stay split, k/v match the sharded
+    pool's layout so the page scatter is shard-local, and the attention
+    einsums run on per-shard head stripes."""
+    q = constrain_q_heads(q)
+    k = constrain_kv_heads(k)
+    v = constrain_kv_heads(v)
     return gather_model(q), gather_model(k), gather_model(v)
 
 
@@ -400,8 +416,11 @@ def decoder_decode_step(params, cfg: ModelConfig, token, cache, cache_len):
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     # vocab-sharded lm_head: column-parallel, no contraction over the
-    # sharded dim — the gather is a pure relayout, so sampling sees the
-    # exact single-device logits
+    # sharded dim.  Exact mode gathers (pure relayout — sampling sees
+    # the exact single-device logits); efficient mode leaves the hook
+    # as identity so the logits STAY vocab-sharded and the fused step's
+    # argmax/categorical runs partitioned — only the winning token
+    # crosses shards, never the logits
     logits = gather_model(jnp.einsum("bsd,dv->bsv", h, head))
     return logits, new_cache
 
@@ -474,8 +493,13 @@ def _attn_decode_paged(cfg, p, h, k_pool, v_pool, cache_len, block_tables,
         k[:, 0].astype(k_pool.dtype)).reshape(k_pool.shape)
     v_pool = v_pool.reshape(flat).at[phys].set(
         v[:, 0].astype(v_pool.dtype)).reshape(v_pool.shape)
+    # efficient-mode LSE fallback (sharding.context): when kv heads
+    # don't divide the mesh, the logical page axis is split instead and
+    # partial softmaxes merge via log-sum-exp combining
     o = decode_attention_paged(q, k_pool, v_pool, block_tables,
-                               cache_len + 1, window=window)
+                               cache_len + 1, window=window,
+                               n_splits=attn_split_count(),
+                               constrain_split=constrain_attn_split)
     return _wo_proj(cfg, p, o), k_pool, v_pool
 
 
@@ -573,8 +597,11 @@ def decoder_decode_step_paged(params, cfg: ModelConfig, token, cache,
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     # vocab-sharded lm_head: column-parallel, no contraction over the
-    # sharded dim — the gather is a pure relayout, so sampling sees the
-    # exact single-device logits
+    # sharded dim.  Exact mode gathers (pure relayout — sampling sees
+    # the exact single-device logits); efficient mode leaves the hook
+    # as identity so the logits STAY vocab-sharded and the fused step's
+    # argmax/categorical runs partitioned — only the winning token
+    # crosses shards, never the logits
     logits = gather_model(jnp.einsum("bsd,dv->bsv", h, head))
     return logits, new_cache
 

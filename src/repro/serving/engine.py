@@ -136,6 +136,18 @@ class ServingEngine:
     # holds under the mesh too.
     mesh: object | None = None
     tp: int = 1
+    # "exact" (default) shards only what preserves bit-identity (KV pool
+    # + expert buffers); "efficient" flips the Megatron weight axes on
+    # too (column-parallel qkv/up/gate, row-parallel wo/down, vocab-
+    # sharded lm_head, LSE-split attention when heads don't divide) and
+    # trades bit-identity for a tolerance contract
+    # (testing.assert_tokens_close; docs/sharded_serving.md).
+    parallel: str = "exact"
+    # Per-device HBM budget for the admission-time memory preflight:
+    # when set, __post_init__ refuses to build an engine whose per-shard
+    # weights + KV pool + fused-step workspace exceed it, *before* any
+    # device allocation happens.  None skips the check.
+    device_memory_gb: float | None = None
 
     _requests: dict[str, ServeRequest] = field(default_factory=dict)
     _running: list[str] = field(default_factory=list)
@@ -153,26 +165,35 @@ class ServingEngine:
                 "the paged engine")
         if self.tp < 1:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.parallel not in ("exact", "efficient"):
+            raise ValueError(
+                f"bad parallel {self.parallel!r}: expected 'exact' or "
+                "'efficient'")
         self.plan = None
         if self.mesh is None and self.tp > 1:
             from ..launch.mesh import make_local_mesh
             self.mesh = make_local_mesh(tp=self.tp)
         if self.mesh is not None:
             from .sharded import ShardingPlan
-            self.plan = ShardingPlan.build(self.model, self.mesh)
+            self.plan = ShardingPlan.build(self.model, self.mesh,
+                                           parallel=self.parallel)
             if self.tp > 1 and self.tp != self.plan.tp:
                 raise ValueError(
                     f"tp={self.tp} contradicts mesh model axis "
                     f"{self.plan.tp}")
             self.tp = self.plan.tp
-        if self.params is None:
-            self.params = self.model.init(jax.random.PRNGKey(self.seed))
-        if self.plan is not None:
-            self.params = self.plan.place_params(self.params)
+        # KVCacheManager is pure host bookkeeping — built before the
+        # memory preflight so pool_blocks feeds the per-shard estimate
+        # without having allocated anything on device yet.
         self.kv = KVCacheManager(
             self.n_slots, self.max_seq_len, self.capacity_tokens,
             block_size=self.block_size,
             swap_capacity_tokens=self.swap_capacity_tokens)
+        self._preflight_memory()
+        if self.params is None:
+            self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        if self.plan is not None:
+            self.params = self.plan.place_params(self.params)
         if self.service_model is None:
             self.service_model = ServiceModel()
         self.metrics = EngineMetrics()
@@ -311,6 +332,39 @@ class ServingEngine:
         # abstract (shape/dtype/sharding) args of the last fused call —
         # lower_fused_hlo() re-lowers them for the roofline bench
         self._last_fused_call = None
+
+    def _preflight_memory(self) -> None:
+        """Refuse to build an engine that cannot fit one shard on one
+        device.  Pure arithmetic over parameter templates and pool
+        shapes (``sharded.estimate_device_bytes``) — runs before any
+        device allocation, so an over-budget config fails with a
+        diagnostic instead of an allocator OOM mid-init."""
+        self.preflight = None
+        if self.device_memory_gb is None:
+            return
+        from .sharded import estimate_device_bytes
+        est = estimate_device_bytes(
+            self.model, tp=self.tp, parallel=self.parallel,
+            n_pages=self.kv.pool_blocks, page_size=self.block_size,
+            n_slots=self.n_slots)
+        budget = int(self.device_memory_gb * (1 << 30))
+        if est["total_bytes"] > budget:
+            gib = 1 << 30
+            fixes = "raise tp or shrink the KV pool" \
+                if self.parallel == "efficient" \
+                else "raise tp, switch parallel='efficient', or shrink " \
+                     "the KV pool"
+            raise ValueError(
+                f"model {self.model.cfg.name!r} does not fit: per-device "
+                f"need {est['total_bytes'] / gib:.2f} GiB "
+                f"(weights {est['weights_bytes'] / gib:.2f} + "
+                f"KV pool {est['kv_pool_bytes'] / gib:.2f} + "
+                f"workspace {est['workspace_bytes'] / gib:.2f}) "
+                f"> budget {self.device_memory_gb:.2f} GiB at "
+                f"tp={self.tp} parallel={self.parallel!r}; {fixes} "
+                f"(replicated bytes: {est['replicated_bytes'] / gib:.2f} "
+                "GiB)")
+        self.preflight = est
 
     # ------------------------------------------------------------ frontend
 

@@ -2,11 +2,15 @@
 
 from .context import (activation_sharding, constrain_activations,
                       gather_model, serving_sharding)
-from .partitioning import (batch_axes, decode_rules, kv_cache_spec,
-                           logits_spec, named_shardings, paged_kv_pool_spec,
-                           resolve_specs, rules_for, ssm_state_spec)
+from .partitioning import (batch_axes, decode_rule_table, decode_rules,
+                           kv_cache_spec, logits_spec, megatron_axes,
+                           named_shardings, paged_kv_pool_spec,
+                           resolve_specs, rules_for, shard_bytes_table,
+                           ssm_state_spec)
 
 __all__ = ["activation_sharding", "constrain_activations", "batch_axes",
-           "decode_rules", "gather_model", "kv_cache_spec", "logits_spec",
+           "decode_rule_table", "decode_rules", "gather_model",
+           "kv_cache_spec", "logits_spec", "megatron_axes",
            "named_shardings", "paged_kv_pool_spec", "resolve_specs",
-           "rules_for", "serving_sharding", "ssm_state_spec"]
+           "rules_for", "serving_sharding", "shard_bytes_table",
+           "ssm_state_spec"]

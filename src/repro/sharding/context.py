@@ -17,7 +17,9 @@ import jax
 _state = threading.local()
 
 __all__ = ["constrain_activations", "activation_sharding",
-           "gather_model", "serving_sharding"]
+           "gather_model", "serving_sharding", "constrain_q_heads",
+           "constrain_kv_heads", "attn_split_count",
+           "constrain_attn_split"]
 
 
 def constrain_activations(h):
@@ -88,23 +90,82 @@ def gather_model(x):
     return fn(x)
 
 
+def constrain_q_heads(x):
+    """Pin a freshly projected (B, S, H, dh) query to the serving plan's
+    head sharding (identity outside an efficient-mode serving context).
+    Separate from ``constrain_heads`` (the *training* hook) so the
+    serving engine never perturbs train/dry-run lowering."""
+    spec = getattr(_state, "q_heads_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_kv_heads(x):
+    """Pin a freshly projected (B, S, KV, dh) key/value to the serving
+    plan's kv-head sharding — matching the paged pool's layout, so the
+    pool scatter is shard-local (identity outside an efficient-mode
+    serving context)."""
+    spec = getattr(_state, "kv_heads_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def attn_split_count() -> int:
+    """Number of log-sum-exp splits of the logical page axis in paged
+    decode attention (models.attention.decode_attention_paged).  1 (no
+    split) outside a serving context; the efficient-mode plan installs
+    tp when the kv heads don't divide the mesh, so attention still
+    parallelizes via flash-style (m, l, acc) partials merged across
+    splits."""
+    return int(getattr(_state, "attn_splits", 1) or 1)
+
+
+def constrain_attn_split(x):
+    """Constrain a tensor whose axis 1 is the LSE split axis (the token
+    index map, then transitively the gathered KV stripes and partial
+    softmax stats) to split-sharded over 'model'."""
+    spec = getattr(_state, "split_spec", None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
 @contextlib.contextmanager
-def serving_sharding(gather_fn, expert_spec=None):
+def serving_sharding(gather_fn, expert_spec=None, q_heads_spec=None,
+                     kv_heads_spec=None, attn_splits=1, split_spec=None):
     """Install the serving-decode hooks around a jit trace: ``gather_fn``
     backs ``gather_model``; ``expert_spec`` (optional) backs
     ``constrain_expert_buf`` so the MoE capacity buffer stays
-    expert-sharded.  Scoped: the engine enters this only around its jit
-    call sites, so plain single-device engines in the same process never
-    see the constraints."""
+    expert-sharded.  The efficient-mode plan additionally installs
+    ``q_heads_spec``/``kv_heads_spec`` (column-parallel projection
+    outputs pinned head-sharded), and ``attn_splits``/``split_spec``
+    (the LSE page-split fallback when heads don't divide).  Scoped: the
+    engine enters this only around its jit call sites, so plain
+    single-device engines in the same process never see the
+    constraints."""
     prev_g = getattr(_state, "gather_fn", None)
     prev_e = getattr(_state, "expert_spec", None)
+    prev_q = getattr(_state, "q_heads_spec", None)
+    prev_kv = getattr(_state, "kv_heads_spec", None)
+    prev_n = getattr(_state, "attn_splits", 1)
+    prev_sp = getattr(_state, "split_spec", None)
     _state.gather_fn = gather_fn
     _state.expert_spec = expert_spec
+    _state.q_heads_spec = q_heads_spec
+    _state.kv_heads_spec = kv_heads_spec
+    _state.attn_splits = attn_splits
+    _state.split_spec = split_spec
     try:
         yield
     finally:
         _state.gather_fn = prev_g
         _state.expert_spec = prev_e
+        _state.q_heads_spec = prev_q
+        _state.kv_heads_spec = prev_kv
+        _state.attn_splits = prev_n
+        _state.split_spec = prev_sp
 
 
 @contextlib.contextmanager

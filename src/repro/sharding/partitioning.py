@@ -22,12 +22,38 @@ combine — DESIGN.md Sec. 5).
 
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["rules_for", "resolve_specs", "batch_axes", "kv_cache_spec",
            "ssm_state_spec", "logits_spec", "named_shardings",
-           "decode_rules", "paged_kv_pool_spec"]
+           "decode_rules", "decode_rule_table", "paged_kv_pool_spec",
+           "megatron_axes", "shard_bytes_table"]
+
+# The ONE Megatron axis table: every logical parameter axis that tensor
+# parallelism splits, shared by the train/serve rules (``rules_for``) and
+# the serving engine's ``parallel="efficient"`` decode rules
+# (``decode_rule_table``).  vocab/heads/kv/mlp are column-parallel output
+# dims; heads_out and the mlp w_out contraction are row-parallel (psum
+# after); expert is expert-parallel; ssm_inner splits the Mamba2 inner
+# projection.  Callers apply their own gating (train: static
+# ``model_parallel`` config; decode: actual-tp divisibility) on top.
+MEGATRON_AXES = ("vocab", "heads", "heads_out", "kv", "mlp", "expert",
+                 "ssm_inner")
+
+
+def megatron_axes(axis: str = "model") -> dict:
+    """Base logical-axis -> mesh-axis map with every Megatron axis
+    assigned to ``axis`` and everything else replicated."""
+    rules = {a: None for a in ("vocab", "heads", "heads_out", "kv", "mlp",
+                               "expert", "expert_mlp", "router",
+                               "ssm_inner", "embed", "layers", None)}
+    for a in MEGATRON_AXES:
+        rules[a] = axis
+    return rules
 
 
 def _mesh_axes(mesh: Mesh) -> tuple:
@@ -55,22 +81,9 @@ def batch_axes(mesh: Mesh, global_batch: int | None = None):
 def rules_for(cfg, mode: str, mesh: Mesh) -> dict:
     """Logical-axis -> mesh-axis (or None) mapping."""
     has_pod = "pod" in _mesh_axes(mesh)
-    model_ax = "model"
-    kv_shardable = cfg.n_kv_heads >= cfg.model_parallel
-    rules = {
-        "vocab": model_ax,
-        "heads": model_ax,
-        "heads_out": model_ax,       # Megatron row-parallel wo (psum after)
-        "kv": model_ax if kv_shardable else None,
-        "mlp": model_ax,
-        "expert": model_ax,
-        "expert_mlp": None,
-        "router": None,
-        "ssm_inner": model_ax,
-        "embed": None,
-        "layers": None,
-        None: None,
-    }
+    rules = megatron_axes("model")
+    if cfg.n_kv_heads < cfg.model_parallel:
+        rules["kv"] = None
     if mode == "train" and cfg.fsdp:
         # ZeRO-3/FSDP as 2-D weight *storage*: the non-'model' weight dim
         # shards over 'data'; GSPMD all-gathers one layer slice per scan
@@ -83,13 +96,17 @@ def rules_for(cfg, mode: str, mesh: Mesh) -> dict:
     return rules
 
 
-def decode_rules(cfg, mesh: Mesh, axis: str = "model"):
-    """Exact (bit-identical) serving-decode rule set.
+def decode_rule_table(cfg, tp: int, axis: str = "model",
+                      parallel: str = "exact"):
+    """Mesh-free serving-decode rule core: ``(rules, report)`` from the
+    config and an integer tensor-parallel width.  ``decode_rules`` wraps
+    this with mesh validation; the memory preflight and the dry-run
+    min-tp report call it directly (pure arithmetic, no devices).
 
-    Returns ``(rules, report)``.  Unlike ``rules_for``'s train/serve
-    modes, this set shards ONLY batch-like einsum dimensions — axes that
-    no floating-point contraction ever crosses AND whose split leaves
-    every per-slice GEMM the same shape as in the unsharded program:
+    ``parallel="exact"`` — the bit-identical rule set.  It shards ONLY
+    batch-like einsum dimensions — axes that no floating-point
+    contraction ever crosses AND whose split leaves every per-slice GEMM
+    the same shape as in the unsharded program:
 
       * the paged KV pool (and with it the attention einsums) over the
         kv-head dim — scores/values contract over head_dim and sequence,
@@ -107,19 +124,90 @@ def decode_rules(cfg, mesh: Mesh, axis: str = "model"):
     parallel) or contraction (row parallel / psum) dimension changes the
     backend's accumulation path, and the resulting last-ulp float drift
     is amplified into token divergence by discrete MoE routing and
-    sampling thresholds.  Replicated projections recompute identical
-    full-shape GEMMs on every shard; their outputs are sliced locally
-    (exact, no collective) where a sharded consumer needs them.  This is
-    the exactness/efficiency dial: flip these axes to ``axis`` (as the
-    train/serve rules do) to parallelize the projection FLOPs at the
-    cost of bit-identity.
+    sampling thresholds.
 
-    Any component whose dimension does not divide the mesh axis falls
-    back to replicated (still correct, just not sharded) and is flagged
-    in ``report`` so callers can surface the degradation.  The pool's
-    mesh axis travels in the extra ``"pool_kv"`` rule key (not a
-    parameter axis name — see ``paged_kv_pool_spec``).
+    ``parallel="efficient"`` — the Megatron rule set (the SAME axis
+    table ``rules_for`` uses, gated by actual-tp divisibility instead of
+    the static ``model_parallel`` config): column-parallel wq/wk/wv and
+    MLP up/gate, row-parallel wo/down (GSPMD emits one psum per
+    attention block and one per MLP through the existing model code —
+    see ``serving.sharded``), vocab-sharded lm_head/embed with
+    partitioned argmax/categorical, expert-parallel MoE.  Per-token
+    FLOPs genuinely shrink by ~tp at the price of bit-identity: the
+    tolerance contract (``testing.assert_tokens_close``,
+    docs/sharded_serving.md) replaces exactness.  When the kv heads do
+    not divide, attention falls back to an explicit log-sum-exp split
+    over the logical page axis (``report["attn_splits"] > 1``) so the
+    pool bandwidth still scales.
+
+    Any component whose dimension does not divide ``tp`` falls back to
+    replicated (still correct, just not sharded); the parameter axes
+    that fell back are listed in ``report["fallbacks"]`` so callers can
+    surface the degradation (``ShardingPlan`` warns on big weights).
+    The pool's mesh axis travels in the extra ``"pool_kv"`` rule key
+    (not a parameter axis name — see ``paged_kv_pool_spec``).
     """
+    if parallel not in ("exact", "efficient"):
+        raise ValueError(f"bad parallel mode {parallel!r} "
+                         "(expected 'exact' or 'efficient')")
+    heads_ok = cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0
+    expert_ok = cfg.n_experts % tp == 0 if cfg.family == "moe" else False
+    rules = {a: None for a in megatron_axes(axis)}
+    rules["expert"] = axis if expert_ok else None
+    rules["pool_kv"] = axis if heads_ok else None
+    fallbacks = []
+    if cfg.family == "moe" and not expert_ok:
+        fallbacks.append("expert")
+    report = {
+        "tp": tp,
+        "parallel": parallel,
+        "attention": "sharded" if heads_ok else "replicated",
+        "experts": ("sharded" if expert_ok else "replicated")
+        if cfg.family == "moe" else "n/a",
+        "vocab": "replicated",
+        "mlp": "replicated",
+        "ssm": "replicated" if cfg.family in ("ssm", "hybrid") else "n/a",
+        "attn_splits": 1,
+    }
+    if parallel == "efficient":
+        vocab_ok = cfg.padded_vocab % tp == 0
+        ff_dims = [cfg.d_ff]
+        if cfg.family == "moe" and cfg.first_k_dense:
+            ff_dims.append(cfg.dense_d_ff or cfg.d_ff)
+        mlp_ok = all(d % tp == 0 for d in ff_dims)
+        if heads_ok:
+            rules["heads"] = rules["heads_out"] = rules["kv"] = axis
+        else:
+            fallbacks += ["heads", "heads_out", "kv"]
+            # pool stays replicated; attention parallelism comes from an
+            # explicit LSE split over the logical page axis instead
+            report["attention"] = "lse-split" if tp > 1 else "replicated"
+            report["attn_splits"] = tp
+        rules["vocab"] = axis if vocab_ok else None
+        rules["mlp"] = axis if mlp_ok else None
+        if not vocab_ok:
+            fallbacks.append("vocab")
+        if not mlp_ok:
+            fallbacks.append("mlp")
+        report["vocab"] = "sharded" if vocab_ok else "replicated"
+        report["mlp"] = "sharded" if mlp_ok else "replicated"
+        if cfg.family in ("ssm", "hybrid"):
+            d_inner = getattr(cfg, "d_inner", 0) or 0
+            if d_inner and d_inner % tp == 0:
+                rules["ssm_inner"] = axis
+                report["ssm"] = "sharded"
+            else:
+                fallbacks.append("ssm_inner")
+    report["fallbacks"] = tuple(fallbacks)
+    return rules, report
+
+
+def decode_rules(cfg, mesh: Mesh, axis: str = "model",
+                 parallel: str = "exact"):
+    """Serving-decode rule set for an actual mesh (``decode_rule_table``
+    plus validation): raises if any non-``axis`` mesh axis is bigger
+    than 1 — the serving engine manages the batch host-side and only
+    shards over the model axis."""
     tp = mesh.shape[axis]
     for a in mesh.axis_names:
         if a != axis and mesh.shape[a] != 1:
@@ -127,33 +215,7 @@ def decode_rules(cfg, mesh: Mesh, axis: str = "model"):
                 f"decode_rules: non-'{axis}' mesh axis {a!r} has size "
                 f"{mesh.shape[a]} — the serving engine manages the batch "
                 "host-side and only shards over the model axis")
-    heads_ok = cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0
-    expert_ok = cfg.n_experts % tp == 0 if cfg.family == "moe" else False
-    rules = {
-        "vocab": None,
-        "heads": None,
-        "heads_out": None,
-        "kv": None,
-        "mlp": None,
-        "expert": axis if expert_ok else None,
-        "expert_mlp": None,
-        "router": None,
-        "ssm_inner": None,
-        "embed": None,
-        "layers": None,
-        None: None,
-        "pool_kv": axis if heads_ok else None,
-    }
-    report = {
-        "tp": tp,
-        "attention": "sharded" if heads_ok else "replicated",
-        "experts": ("sharded" if expert_ok else "replicated")
-        if cfg.family == "moe" else "n/a",
-        "vocab": "replicated",
-        "mlp": "replicated",
-        "ssm": "replicated" if cfg.family in ("ssm", "hybrid") else "n/a",
-    }
-    return rules, report
+    return decode_rule_table(cfg, int(tp), axis, parallel)
 
 
 def paged_kv_pool_spec(rules: dict):
@@ -201,3 +263,38 @@ def logits_spec(mesh: Mesh, mode: str, global_batch: int | None = None):
 def named_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def _is_param_spec(x) -> bool:
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def shard_bytes_table(template, rules: dict, tp: int,
+                      fallbacks=()) -> list[dict]:
+    """Per-tensor byte accounting for a parameter template under a rule
+    set: one row per ``ParamSpec`` leaf with its global byte size, the
+    per-device shard size (``bytes // tp`` when any logical axis maps to
+    a mesh axis, else replicated at full size), and whether replication
+    was a divisibility *fallback* (``fallbacks`` is the rule report's
+    list of logical axes that wanted sharding but fell back).  Pure
+    arithmetic — no mesh, no devices — so the dry-run min-tp report
+    prices multi-hundred-GiB configs instantly."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_param_spec)[0]
+    rows = []
+    for path, spec in leaves:
+        axes = spec.axes if spec.axes is not None else ()
+        sharded = any(rules.get(a) is not None for a in axes)
+        nbytes = int(math.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
+        per_dev = nbytes // tp if sharded else nbytes
+        rows.append({
+            "name": jax.tree_util.keystr(path),
+            "shape": tuple(int(d) for d in spec.shape),
+            "axes": tuple(axes),
+            "spec": str(P(*[rules.get(a) for a in axes])),
+            "bytes": nbytes,
+            "bytes_per_device": per_dev,
+            "sharded": sharded,
+            "fallback": not sharded and any(a in fallbacks for a in axes),
+        })
+    return rows

@@ -6,6 +6,8 @@ benchmark harness drives the same fault matrix CI asserts on.
 
 from .faults import (FlakyPredictor, KVFaultError, PredictorUnavailable,
                      VirtualClock, assert_engine_quiesced, inject_kv_fault)
+from .tolerance import TokenMismatch, assert_tokens_close
 
 __all__ = ["FlakyPredictor", "KVFaultError", "PredictorUnavailable",
-           "VirtualClock", "assert_engine_quiesced", "inject_kv_fault"]
+           "TokenMismatch", "VirtualClock", "assert_engine_quiesced",
+           "assert_tokens_close", "inject_kv_fault"]

@@ -92,6 +92,50 @@ def test_paged_decode_attention_vs_oracle(B, H, KV, dh, page, P, n_pages,
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n_splits", [2, 4])
+def test_paged_lse_kernel_stripes_merge_to_full(n_splits, dtype):
+    """The (out, lse) Pallas variant run per page-stripe, merged by
+    ``combine_lse_partials``, equals the full paged kernel AND the
+    oracle — the device-side half of the sharded lse-split path."""
+    from repro.kernels.decode_attention import decode_attention_paged_lse_op
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_paged_lse_reference)
+    from repro.models.attention import combine_lse_partials
+    rng = np.random.default_rng(9)
+    B, H, KV, dh, page, P, n_pages = 2, 8, 2, 64, 16, 8, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, H, dh)), dtype)
+    kp = jnp.asarray(rng.normal(0, 1, (n_pages, page, KV, dh)), dtype)
+    vp = jnp.asarray(rng.normal(0, 1, (n_pages, page, KV, dh)), dtype)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages))[:B * P]
+                     .reshape(B, P), jnp.int32)
+    cl = jnp.asarray(rng.integers(1, P * page, (B,)), jnp.int32)
+
+    want = decode_attention_paged_reference(q, kp, vp, bt, cl)
+    # full-call (out, lse) pallas vs the lse oracle
+    out_full, lse_full = decode_attention_paged_lse_op(
+        q, kp, vp, bt, cl, force_pallas=True)
+    _, lse_ref = decode_attention_paged_lse_reference(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(out_full, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(lse_full), np.asarray(lse_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    # striped partials (some stripes fully masked for short rows) merge
+    # back to the full result
+    sp = P // n_splits
+    outs, lses = [], []
+    for s in range(n_splits):
+        o, l = decode_attention_paged_lse_op(
+            q, kp, vp, bt[:, s * sp:(s + 1) * sp],
+            jnp.clip(cl - s * sp * page, 0), force_pallas=True)
+        outs.append(o.astype(jnp.float32))
+        lses.append(l)
+    got, _ = combine_lse_partials(jnp.stack(outs), jnp.stack(lses))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
 def test_paged_decode_matches_dense_on_gathered_cache():
     """Paged oracle == dense oracle when the pool is gathered through the
     block table — the indirection is a pure relayout."""

@@ -1,0 +1,174 @@
+"""Unit coverage for the efficient-mode tolerance contract.
+
+Two halves:
+
+1. ``testing.assert_tokens_close`` — the contract itself must be sharp:
+   it passes bit-identical streams, charges autoregressive suffix drift
+   as ONE divergence, and catches the injected failure mode it exists
+   for (an ulp-scale logit perturbation flipping a sampling threshold).
+
+2. ``models.attention.combine_lse_partials`` — the LSE-combine merge
+   must equal a dense softmax over the concatenated sequence to f32
+   tolerance for *random* splits, including degenerate (fully-masked)
+   stripes.  This is the algebraic fact the sharded lse-split attention
+   path rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import combine_lse_partials
+from repro.testing import TokenMismatch, assert_tokens_close
+
+
+# ------------------------------------------------- assert_tokens_close
+
+def test_bit_identical_streams_pass():
+    streams = [[1, 2, 3, 4], [9, 8, 7]]
+    stats = assert_tokens_close(streams, [list(s) for s in streams],
+                                bit_identical=True)
+    assert stats["rate"] == 1.0 and stats["divergences"] == 0
+
+
+def test_single_stream_int_form():
+    stats = assert_tokens_close([1, 2, 3], [1, 2, 3])
+    assert stats["compared"] == 3
+
+
+def test_bit_identical_rejects_any_flip():
+    with pytest.raises(TokenMismatch, match="bit-identical"):
+        assert_tokens_close([[1, 2, 3]], [[1, 2, 4]], bit_identical=True)
+
+
+def test_suffix_drift_charged_once():
+    """Everything after the first flip is autoregressive consequence,
+    not independent evidence: a long stream that diverges at position
+    500 of 1000 has match rate 500/501, not 500/1000."""
+    want = list(range(1000))
+    got = want[:500] + [x + 1 for x in want[500:]]
+    stats = assert_tokens_close([got], [want], min_match_rate=0.99)
+    assert stats["divergences"] == 1
+    assert stats["compared"] == 501 and stats["matched"] == 500
+    # but an early flip in a short stream fails the default 0.999 bar
+    with pytest.raises(TokenMismatch, match="match rate"):
+        assert_tokens_close([[5, 1, 2]], [[4, 1, 2]])
+
+
+def test_length_mismatch_is_divergence():
+    with pytest.raises(TokenMismatch):
+        assert_tokens_close([[1, 2]], [[1, 2, 3]], bit_identical=True)
+
+
+def test_catches_ulp_perturbation_flipping_threshold():
+    """The injected failure the contract exists to catch: perturb the
+    reference logits by one bf16 ulp so that a near-tied greedy argmax
+    flips, decode both streams, and require the checker to flag it when
+    the flip rate is material."""
+    rng = np.random.default_rng(0)
+    vocab, steps = 64, 400
+    base = rng.normal(size=(steps, vocab)).astype(np.float32)
+    # engineer near-ties every 4th step: runner-up within half an ulp
+    tie = np.arange(0, steps, 4)
+    top = base[tie].argmax(axis=1)
+    runner = (top + 1) % vocab
+    base[tie, runner] = base[tie, top] - 1e-4
+    perturbed = base.copy()
+    perturbed[tie, runner] += 2e-4          # flips exactly the ties
+
+    want = [list(base.argmax(axis=1))]
+    got = [list(perturbed.argmax(axis=1))]
+    with pytest.raises(TokenMismatch, match="match rate"):
+        assert_tokens_close(got, want)
+    # the same perturbation below the tie margin changes nothing
+    ok = base.copy()
+    ok[tie, runner] += 1e-5
+    stats = assert_tokens_close([list(ok.argmax(axis=1))], want,
+                                bit_identical=True)
+    assert stats["rate"] == 1.0
+
+
+def test_logit_drift_bound():
+    with pytest.raises(TokenMismatch, match="logit drift"):
+        assert_tokens_close([[1, 2]], [[1, 2]],
+                            logits=np.array([0.0, 1.0]),
+                            ref_logits=np.array([0.0, 2.0]),
+                            max_logit_diff=0.5)
+    stats = assert_tokens_close([[1, 2]], [[1, 2]],
+                                logits=np.array([0.0, 1.0]),
+                                ref_logits=np.array([0.0, 1.0001]),
+                                max_logit_diff=0.5)
+    assert stats["max_logit_diff"] < 0.5
+
+
+# -------------------------------------------- combine_lse_partials law
+
+def _dense_softmax_attn(scores, v):
+    """scores (h, S) f32, v (S, dh) -> (out (h, dh), lse (h,))."""
+    m = scores.max(axis=1, keepdims=True)
+    p = np.exp(scores - m)
+    l = p.sum(axis=1, keepdims=True)
+    return (p / l) @ v, (m + np.log(l))[:, 0]
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_lse_combine_matches_dense_softmax(seed):
+    """For ANY partition of the key sequence, per-stripe normalized
+    partials merged by LSE combine equal the dense softmax over the
+    whole sequence — to f32 tolerance."""
+    rng = np.random.default_rng(seed)
+    h, S, dh = 6, 96, 32
+    scores = rng.normal(scale=3.0, size=(h, S)).astype(np.float32)
+    v = rng.normal(size=(S, dh)).astype(np.float32)
+    want_out, want_lse = _dense_softmax_attn(scores, v)
+
+    # random split points, including size-1 stripes
+    n_splits = int(rng.integers(2, 6))
+    cuts = np.sort(rng.choice(np.arange(1, S), n_splits - 1,
+                              replace=False))
+    bounds = [0, *cuts.tolist(), S]
+    outs, lses = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        o, l = _dense_softmax_attn(scores[:, lo:hi], v[lo:hi])
+        outs.append(o)
+        lses.append(l)
+    got_out, got_lse = combine_lse_partials(
+        jnp.stack(outs), jnp.stack(lses))
+    np.testing.assert_allclose(np.asarray(got_out), want_out,
+                               atol=2e-6, rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_lse), want_lse,
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_lse_combine_fully_masked_stripe_weighs_zero():
+    """A stripe whose every key is masked contributes lse ~ -1e30; its
+    merge weight must underflow to exactly 0, not NaN."""
+    rng = np.random.default_rng(3)
+    h, S, dh = 4, 32, 16
+    scores = rng.normal(size=(h, S)).astype(np.float32)
+    v = rng.normal(size=(S, dh)).astype(np.float32)
+    want_out, want_lse = _dense_softmax_attn(scores, v)
+
+    masked = np.full((h, S), -1e30, np.float32)
+    o_live, l_live = _dense_softmax_attn(scores, v)
+    o_dead, l_dead = _dense_softmax_attn(masked, v)
+    got_out, got_lse = combine_lse_partials(
+        jnp.stack([o_live, o_dead]), jnp.stack([l_live, l_dead]))
+    assert np.isfinite(np.asarray(got_out)).all()
+    np.testing.assert_allclose(np.asarray(got_out), want_out,
+                               atol=2e-6, rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_lse), want_lse,
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_lse_combine_axis_argument():
+    rng = np.random.default_rng(4)
+    outs = rng.normal(size=(3, 5, 2, 8)).astype(np.float32)
+    lses = rng.normal(size=(3, 5, 2)).astype(np.float32)
+    o0, l0 = combine_lse_partials(jnp.asarray(outs), jnp.asarray(lses))
+    o1, l1 = combine_lse_partials(
+        jnp.asarray(np.moveaxis(outs, 0, 1)),
+        jnp.asarray(np.moveaxis(lses, 0, 1)), axis=1)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(o1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
