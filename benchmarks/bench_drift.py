@@ -1,0 +1,182 @@
+"""Prediction-drift regret bench: graceful degradation of the hedged
+scheduler when the length predictor rots.
+
+The experiment isolates the robustness question PR 10 answers: SageSched
+with a *frozen* predictor is great while predictions hold and silently
+bad once the workload drifts away from them; the hedged scheduler
+(``Scheduler(policy="hedged", posterior_quantile=...)``) must track
+frozen Gittins when predictions are good AND refuse to cliff when they
+are not.  Setup:
+
+  * **Frozen predictor** — an ``OraclePredictor`` registered, per
+    prompt, with the request's cluster-level output-length distribution
+    from the UNDRIFTED workload: the best predictor money can buy the
+    day it was trained.  The drifted traces multiply true output
+    lengths (``generate_workload(drift_scale=...)``) while prompts and
+    clusters stay put, so this predictor is honestly, progressively
+    wrong — exactly the failure ``FlakyPredictor(mode="drift")``
+    injects, produced here at the workload level so every policy sees
+    one identical trace.
+  * **Oracle baseline** — the same predictor rebuilt with each
+    request's DRIFTED cluster distribution (``scale_distribution`` by
+    the recorded per-request ``drift_factor``): distributional
+    knowledge of the drift, the regret reference.
+  * **Policies** — ``frozen_gittins`` (SageSched, beliefs frozen at
+    admission), ``fcfs`` (prediction-free), ``hedged`` (multiplicative-
+    weights blend of both orderings + mid-flight posterior truncation
+    at the 0.9 quantile + calibration-driven conformal widening).
+  * **Traces** — ``none`` (no drift), ``drift2x`` (2x length ramp
+    settling mid-trace), ``adversarial`` (3x oscillating drift: any
+    frozen correction is wrong half the time).
+
+Metric: mean slowdown = TTLT / ideal single-request service time
+(prefill + solo decode from the ServiceModel), plus regret vs the
+oracle run.  The CI-asserted gates live in ``["drift"]["gates"]``:
+hedged within 5% of frozen Gittins at no-drift, and >= 10% better mean
+slowdown under the 2x drift trace.
+
+Results merge into BENCH_scheduler.json under the ``drift`` key.
+
+    PYTHONPATH=src python benchmarks/bench_drift.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from common import PROFILES
+from repro.core import (OraclePredictor, Scheduler, empirical_distribution,
+                        make_policy)
+from repro.simulator import NodeSpec, ServiceModel, generate_workload
+from repro.simulator.simulator import simulate
+from repro.testing import scale_distribution
+
+PROFILE = PROFILES["sharegpt"]
+# Constrained node: with the default 256 decode slots everything runs
+# concurrently and scheduling order is irrelevant — 16 slots puts the
+# node in the contended regime where ordering decides slowdown.
+SPEC = NodeSpec(max_batch=16)
+MODEL = ServiceModel(SPEC)
+
+TRACES = {
+    "none": dict(),
+    "drift2x": dict(drift_scale=2.0, drift_mode="ramp",
+                    drift_start=0.25, drift_ramp=0.2),
+    "adversarial": dict(drift_scale=3.0, drift_mode="oscillate",
+                        drift_start=0.2, drift_ramp=0.15),
+}
+
+
+def _cluster_dists(seed: int = 7) -> dict:
+    """Undrifted per-cluster empirical output-length distributions —
+    what a well-trained predictor knows on deployment day."""
+    rng = np.random.default_rng(seed)
+    return {c.cluster_id: empirical_distribution(
+                c.true_length_samples(rng, 512))
+            for c in PROFILE.clusters}
+
+
+def _frozen_predictor(reqs, dists) -> OraclePredictor:
+    o = OraclePredictor()
+    for r in reqs:
+        o.register(r.prompt, dists[r.cluster.cluster_id])
+    return o
+
+
+def _oracle_predictor(reqs, dists) -> OraclePredictor:
+    """Drift-aware reference: the cluster distribution scaled by the
+    request's recorded drift factor (same transform the workload
+    generator applied to the truth)."""
+    o = OraclePredictor()
+    for r in reqs:
+        d = dists[r.cluster.cluster_id]
+        if r.drift_factor != 1.0:
+            d = scale_distribution(d, r.drift_factor)
+        o.register(r.prompt, d)
+    return o
+
+
+def _mean_slowdown(result) -> float:
+    """TTLT over the ideal solo service time (prefill + lone decode)."""
+    slow = []
+    for m in result.metrics:
+        ideal = (MODEL.prefill_time(m.input_len)
+                 + MODEL.decode_run_time(1, m.input_len, m.output_len))
+        slow.append(m.ttlt / ideal)
+    return float(np.mean(slow))
+
+
+def _run(policy_name: str, reqs, predictor, *,
+         posterior_quantile=None) -> dict:
+    sched = Scheduler(policy=make_policy(policy_name), predictor=predictor,
+                      posterior_quantile=posterior_quantile)
+    res = simulate(reqs, sched, spec=SPEC)
+    out = {"mean_slowdown": _mean_slowdown(res),
+           "posterior_updates": res.scheduler_stats.get(
+               "posterior_updates", 0)}
+    hedge = res.scheduler_stats.get("hedge")
+    if hedge:
+        out["hedge"] = hedge
+    return out
+
+
+def bench_drift(smoke: bool) -> dict:
+    n = 150 if smoke else 400
+    rps = 6.0
+    dists = _cluster_dists()
+    out: dict = {"n_requests": n, "rps": rps, "traces": {}}
+    for trace, kw in TRACES.items():
+        reqs = generate_workload([PROFILE], n, rps=rps, seed=11, **kw)
+        frozen = lambda: _frozen_predictor(reqs, dists)  # noqa: E731
+        rows = {
+            "frozen_gittins": _run("sagesched", reqs, frozen()),
+            "fcfs": _run("fcfs", reqs, frozen()),
+            "hedged": _run("hedged", reqs, frozen(),
+                           posterior_quantile=0.9),
+            "oracle": _run("sagesched", reqs,
+                           _oracle_predictor(reqs, dists)),
+        }
+        oracle = rows["oracle"]["mean_slowdown"]
+        for row in rows.values():
+            row["regret"] = row["mean_slowdown"] - oracle
+        out["traces"][trace] = rows
+    t = out["traces"]
+    hedged_none = t["none"]["hedged"]["mean_slowdown"]
+    gittins_none = t["none"]["frozen_gittins"]["mean_slowdown"]
+    hedged_2x = t["drift2x"]["hedged"]["mean_slowdown"]
+    gittins_2x = t["drift2x"]["frozen_gittins"]["mean_slowdown"]
+    out["gates"] = {
+        # graceful degradation, both directions: no tax when predictions
+        # are good, no cliff when they rot
+        "no_drift_within_5pct": bool(hedged_none <= 1.05 * gittins_none),
+        "no_drift_ratio": hedged_none / gittins_none,
+        "drift2x_at_least_10pct_better": bool(
+            hedged_2x <= 0.90 * gittins_2x),
+        "drift2x_ratio": hedged_2x / gittins_2x,
+    }
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: minimal sizes")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_scheduler.json"))
+    args = ap.parse_args(argv)
+
+    drift = bench_drift(args.smoke)
+    path = Path(args.out)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["drift"] = drift
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(json.dumps(drift, indent=2, sort_keys=True))
+    return drift
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ PAPER_PREDICTORS = {
     "gittins": "semantic",
     "sagesched": "semantic",
     "sagesched_aged": "semantic",
+    "hedged": "semantic",
 }
 
 

@@ -5,8 +5,9 @@ Public API:
     SemanticHistoryPredictor + ablation predictors    (Sec. 3.1 / 4.3.1)
     ResourceBoundCost + ablation cost models          (Sec. 3.2 / 4.3.2)
     gittins_index / gittins_index_batch               (Sec. 3.3 math)
-    make_policy: fcfs/fastserve/ssjf/ltr/trail/mean/gittins/sagesched
+    make_policy: fcfs/fastserve/ssjf/ltr/trail/mean/gittins/sagesched/hedged
     Scheduler: the Fig. 3 workflow facade
+    CalibrationMonitor / truncate_rows / prediction_loss  (drift robustness)
 """
 
 from .backends import (BACKEND_NAMES, BatchView, NumpyPriorityBackend,
@@ -20,11 +21,12 @@ from .embedding import PromptEmbedder
 from .gittins import (gittins_index, gittins_index_batch, mean_index,
                       mean_index_batch)
 from .history import HistoryRecord, HistoryStore
-from .policies import POLICY_NAMES, Policy, make_policy
+from .policies import POLICY_NAMES, HedgedPolicy, Policy, make_policy
 from .predictor import (LengthDistribution, LengthHistoryPredictor,
                         OraclePredictor, PointPredictor, Predictor,
                         ProxyModelPredictor, SemanticHistoryPredictor,
                         empirical_distribution)
+from .robust import CalibrationMonitor, crps, prediction_loss, truncate_rows
 from .scheduler import BatchState, ScheduledRequest, Scheduler
 
 __all__ = [
@@ -36,9 +38,11 @@ __all__ = [
     "BACKEND_NAMES", "BatchView", "NumpyPriorityBackend",
     "PallasPriorityBackend", "PriorityBackend", "make_priority_backend",
     "HistoryRecord", "HistoryStore",
-    "POLICY_NAMES", "Policy", "make_policy", "LengthDistribution",
+    "POLICY_NAMES", "HedgedPolicy", "Policy", "make_policy",
+    "LengthDistribution",
     "LengthHistoryPredictor", "OraclePredictor", "PointPredictor",
     "Predictor", "ProxyModelPredictor", "SemanticHistoryPredictor",
     "empirical_distribution", "BatchState", "ScheduledRequest",
     "Scheduler",
+    "CalibrationMonitor", "crps", "prediction_loss", "truncate_rows",
 ]

@@ -158,6 +158,22 @@ class CostDistribution:
         ``CostAwareRouter(route_quantile=...)``."""
         return float(self.support[quantile_index(self.probs, q)])
 
+    def truncate(self, attained: float) -> "CostDistribution | None":
+        """Condition on X > ``attained`` WITHOUT re-origining — the
+        mid-flight posterior update (repro.core.robust), the absolute-
+        support sibling of ``shift``: ``shift`` answers "what remains
+        from here" for a Gittins evaluation, ``truncate`` updates the
+        stored belief itself so every later consumer (means, quantiles,
+        shed scores, further shifts) sees only the unfalsified mass.
+        Returns None when everything is falsified (caller substitutes a
+        tail belief).  Sequential cumsum renormalizer: bit-identical to
+        the batched ``robust.truncate_rows``."""
+        alive = self.support > attained
+        if not alive.any():
+            return None
+        p = self.probs[alive]
+        return CostDistribution(self.support[alive], p / np.cumsum(p)[-1])
+
     def shift(self, attained: float) -> "CostDistribution":
         """Condition on X > ``attained`` and re-origin at it (the Bayesian
         update behind the paper's runtime Gittins refresh: mass at costs the

@@ -24,6 +24,9 @@ Implemented policies (paper Sec. 2.2 / 4.1 / 4.3.3):
   mean        Expected remaining *cost* (ablation, Fig. 6/11 'Mean').
   gittins     Gittins index at admission, never refreshed (ablation).
   sagesched   Gittins index + runtime bucket refresh — the paper's policy.
+  hedged      Online hedge between a prediction-trusting ordering and a
+              prediction-free one, multiplicative weights updated from
+              realized prediction error (arXiv:2508.14544 playbook).
 """
 
 from __future__ import annotations
@@ -31,8 +34,9 @@ from __future__ import annotations
 import numpy as np
 
 from .gittins import gittins_index, mean_index
+from .robust import prediction_loss
 
-__all__ = ["Policy", "make_policy", "POLICY_NAMES"]
+__all__ = ["Policy", "HedgedPolicy", "make_policy", "POLICY_NAMES"]
 
 
 class Policy:
@@ -319,6 +323,120 @@ class AgedSageSchedPolicy(Policy):
                               view.arrival, self.now)
 
 
+class HedgedPolicy(Policy):
+    """BEYOND-PAPER: online hedging between prediction-trusting and
+    prediction-free orderings (robustness to prediction drift).
+
+    Runs two sub-policies side by side — ``trusting`` (default
+    SageSched: Gittins over the predicted cost distribution) and
+    ``free`` (default FCFS: no per-request information) — and blends
+    their *ranks* over the live set:
+
+        priority_i = (w_t * rank_t(i) + w_f * rank_f(i)) / (n - 1)
+
+    Ranks (not raw priorities) make the blend scale-free: Gittins
+    indices and arrival timestamps live in incomparable units.  The
+    weights follow multiplicative weights / Hedge: at each completion
+    the trusting expert is charged ``prediction_loss`` (the realized
+    log-loss margin of the admission-time prediction, in [0, 1]) and
+    the free expert the constant break-even 0.5, then
+    ``w *= exp(-eta * loss)``.  A sharp, correct predictor drives
+    w_t -> 1 (pure SageSched); drift drives w_f up and the ordering
+    degrades gracefully toward FCFS instead of cliffing on confidently
+    wrong indices.  Log-weights are clamped to ``max_log_ratio`` so
+    neither expert is ever abandoned — recovery after a regime shift
+    takes O(max_log_ratio / eta) completions, not forever.
+
+    Rank blending needs the FULL live set, so the policy sets
+    ``rank_based = True``: the Scheduler promotes any dirty row to an
+    all-rows refresh and requires an array backend (the object path has
+    no batch view to rank over).
+    """
+
+    name = "hedged"
+    preemptive = True
+    rank_based = True   # priorities are ranks over the whole live set
+
+    def __init__(self, trusting: "Policy | str | None" = None,
+                 free: "Policy | str | None" = None,
+                 eta: float = 0.8,
+                 w_trust: float = 0.5,
+                 max_log_ratio: float = 6.0,
+                 free_loss: float = 0.5,
+                 max_len: int = 4096):
+        if isinstance(trusting, str):
+            trusting = make_policy(trusting)
+        if isinstance(free, str):
+            free = make_policy(free)
+        self.trusting = trusting or SageSchedPolicy()
+        self.free = free or FCFSPolicy()
+        self.refreshing = self.trusting.refreshing or self.free.refreshing
+        self.eta = float(eta)
+        self.max_log_ratio = float(max_log_ratio)
+        self.free_loss = float(free_loss)
+        self.max_len = int(max_len)
+        w0 = float(np.clip(w_trust, 1e-6, 1.0 - 1e-6))
+        self._lw = np.log(np.array([w0, 1.0 - w0]))
+        self._lw -= self._lw.max()
+        self.updates = 0
+
+    @property
+    def weights(self) -> tuple[float, float]:
+        w = np.exp(self._lw - self._lw.max())
+        w = w / np.cumsum(w)[-1]
+        return float(w[0]), float(w[1])
+
+    def snapshot(self) -> dict:
+        w_t, w_f = self.weights
+        return {"w_trust": w_t, "w_free": w_f, "updates": self.updates}
+
+    def observe_outcome(self, dist, actual: int) -> None:
+        """Hedge update at completion: ``dist`` is the admission-time
+        prediction (None when it was a degraded-mode prior — nothing to
+        score), ``actual`` the realized output length."""
+        if dist is None:
+            return
+        loss_t = prediction_loss(dist, actual, self.max_len)
+        self._lw[0] -= self.eta * loss_t
+        self._lw[1] -= self.eta * self.free_loss
+        self._lw -= self._lw.max()
+        np.clip(self._lw, -self.max_log_ratio, 0.0, out=self._lw)
+        self.updates += 1
+
+    def priority(self, sr) -> float:
+        raise RuntimeError(
+            "hedged priorities are ranks over the whole live set; use an "
+            "array priority_backend (numpy/pallas), not 'object'")
+
+    @staticmethod
+    def _ranks(prio: np.ndarray, arrival: np.ndarray) -> np.ndarray:
+        r = np.empty(prio.shape[0], np.float64)
+        r[np.lexsort((arrival, prio))] = np.arange(prio.shape[0],
+                                                   dtype=np.float64)
+        return r
+
+    def priority_batch(self, view, backend) -> np.ndarray:
+        n = view.arrival.shape[0]
+        if n == 0:
+            return np.zeros(0)
+        p_t = np.asarray(self.trusting.priority_batch(view, backend),
+                         np.float64)
+        p_f = np.asarray(self.free.priority_batch(view, backend), np.float64)
+        w_t, w_f = self.weights
+        blended = w_t * self._ranks(p_t, view.arrival) \
+            + w_f * self._ranks(p_f, view.arrival)
+        return blended / max(1, n - 1)
+
+    def next_boundary(self, sr, bucket_size: int) -> float:
+        return min(self.trusting.next_boundary(sr, bucket_size),
+                   self.free.next_boundary(sr, bucket_size))
+
+    def next_boundary_batch(self, generated, bucket_size: int) -> np.ndarray:
+        return np.minimum(
+            self.trusting.next_boundary_batch(generated, bucket_size),
+            self.free.next_boundary_batch(generated, bucket_size))
+
+
 _REGISTRY = {
     "fcfs": FCFSPolicy,
     "fastserve": FastServePolicy,
@@ -329,6 +447,7 @@ _REGISTRY = {
     "gittins": GittinsPolicy,
     "sagesched": SageSchedPolicy,
     "sagesched_aged": AgedSageSchedPolicy,
+    "hedged": HedgedPolicy,
 }
 
 POLICY_NAMES = tuple(_REGISTRY)

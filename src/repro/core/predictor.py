@@ -65,6 +65,22 @@ class LengthDistribution:
     def sample(self, rng: np.random.Generator) -> int:
         return int(rng.choice(self.lengths, p=self.probs))
 
+    def truncate(self, min_exclusive: int) -> "LengthDistribution | None":
+        """Condition on L > ``min_exclusive`` keeping lengths absolute —
+        the mid-flight posterior update (repro.core.robust): a request
+        that decoded past a predicted quantile has falsified the mass at
+        or below it.  Unlike ``CostDistribution.shift`` there is no
+        re-origin (the scheduler's generated/attained bookkeeping is
+        absolute).  Returns None when the whole predicted mass is
+        falsified (caller must substitute a tail belief).  Sequential
+        cumsum renormalizer: bit-identical to the batched
+        ``robust.truncate_rows`` over zero-padded rows."""
+        alive = self.lengths > int(min_exclusive)
+        if not alive.any():
+            return None
+        p = self.probs[alive]
+        return LengthDistribution(self.lengths[alive], p / np.cumsum(p)[-1])
+
     def mix_uniform(self, weight: float, max_len: int, k: int = 32
                     ) -> "LengthDistribution":
         """Blend with a uniform distribution (paper Fig. 11 noise test:

@@ -56,8 +56,9 @@ from .backends import (BatchView, NumpyPriorityBackend,
                        make_priority_backend)
 from .cost_model import (CostDistribution, CostModel, ResourceBoundCost,
                          bucketize_support, eviction_scores)
-from .policies import Policy, SageSchedPolicy
+from .policies import Policy, SageSchedPolicy, make_policy
 from .predictor import LengthDistribution, Predictor, SemanticHistoryPredictor
+from .robust import CalibrationMonitor, truncate_rows
 
 __all__ = ["ScheduledRequest", "BatchState", "Scheduler"]
 
@@ -88,6 +89,15 @@ class ScheduledRequest:
     next_refresh: float = float("inf")  # generated count of next refresh
     priority: float = 0.0         # cached policy priority (smaller = sooner)
     node_id: int = -1             # serving node (cluster mode; -1 = unassigned)
+    tenant: str = "default"       # calibration-monitoring key
+    # generated count triggering the next mid-flight posterior update
+    # (inf = posterior updates disabled)
+    posterior_cut: float = float("inf")
+    # the admission-time prediction, kept pristine for completion-time
+    # scoring (hedge weights / calibration must grade the predictor, not
+    # the trivially-covering posterior); None when it was a degraded-mode
+    # prior — there is nothing to grade
+    pred_dist: LengthDistribution | None = field(default=None, repr=False)
     noise_rng: np.random.Generator | None = field(default=None, repr=False)
 
 
@@ -120,6 +130,7 @@ class BatchState:
         self.base_priority = np.zeros(self.cap)
         self.node_id = np.full(self.cap, -1, np.int64)
         self.cost_mean = np.zeros(self.cap)
+        self.posterior_cut = np.full(self.cap, np.inf)
         self.dirty = np.zeros(self.cap, bool)
         self.ids: list[str] = []
         self.index: dict[str, int] = {}
@@ -137,7 +148,8 @@ class BatchState:
                            ("arrival", 0.0), ("input_len", 0),
                            ("next_refresh", np.inf), ("priority", 0.0),
                            ("base_priority", 0.0), ("node_id", -1),
-                           ("cost_mean", 0.0), ("dirty", False)):
+                           ("cost_mean", 0.0), ("posterior_cut", np.inf),
+                           ("dirty", False)):
             old = getattr(self, name)
             arr = np.full(new_cap, fill, old.dtype)
             arr[:self.cap] = old
@@ -191,6 +203,7 @@ class BatchState:
         self.base_priority[i] = base_priority
         self.node_id[i] = node_id
         self.cost_mean[i] = cost_dist.mean
+        self.posterior_cut[i] = np.inf
         self.dirty[i] = False
         self.ids.append(rid)
         self.index[rid] = i
@@ -250,6 +263,7 @@ class BatchState:
         self.priority[idx] = priorities
         self.base_priority[idx] = base_priorities
         self.node_id[idx] = node_ids
+        self.posterior_cut[idx] = np.inf
         self.dirty[idx] = False
         self.n += b
         return idx
@@ -261,7 +275,7 @@ class BatchState:
             for name in ("cost_sup", "cost_probs", "len_sup", "len_probs",
                          "generated", "attained", "arrival", "input_len",
                          "next_refresh", "priority", "base_priority",
-                         "node_id", "cost_mean", "dirty"):
+                         "node_id", "cost_mean", "posterior_cut", "dirty"):
                 arr = getattr(self, name)
                 arr[i] = arr[last]
             moved = self.ids[last]
@@ -293,16 +307,22 @@ class Scheduler:
     def __init__(self,
                  predictor: Predictor | None = None,
                  cost_model: CostModel | None = None,
-                 policy: Policy | None = None,
+                 policy: "Policy | str | None" = None,
                  bucket_size: int = 200,
                  noise_weight: float = 0.0,
                  noise_max_len: int = 4096,
                  priority_backend="numpy",
                  batch_k: int = 8,
                  max_batch_k: int = 256,
+                 posterior_quantile: float | None = None,
+                 calibration: CalibrationMonitor | None = None,
+                 conformal_widening: bool = True,
+                 degraded_exit_successes: int = 4,
                  clock=time.monotonic):
         self.predictor = predictor or SemanticHistoryPredictor()
         self.cost_model = cost_model or ResourceBoundCost()
+        if isinstance(policy, str):
+            policy = make_policy(policy)
         self.policy = policy or SageSchedPolicy()
         self.bucket_size = max(1, bucket_size)
         self.noise_weight = noise_weight  # Fig. 11 robustness experiment
@@ -311,11 +331,35 @@ class Scheduler:
         self.backend = make_priority_backend(priority_backend)
         self._state = BatchState(k=batch_k, max_k=max_batch_k) \
             if self.backend is not None else None
+        if getattr(self.policy, "rank_based", False) and self._state is None:
+            raise ValueError(
+                f"policy {self.policy.name!r} blends ranks over the whole "
+                "live set and needs an array backend; "
+                "priority_backend='object' has no batch view to rank over")
+        # mid-flight posterior updates: truncate a request's stored
+        # length/cost beliefs once it decodes past this quantile of its
+        # own predicted length distribution (None = frozen-at-admission
+        # beliefs, the pre-PR-10 behavior)
+        if posterior_quantile is not None \
+                and not 0.0 < posterior_quantile < 1.0:
+            raise ValueError(
+                f"posterior_quantile must be in (0, 1), got "
+                f"{posterior_quantile!r}")
+        self._posterior_q = posterior_quantile
+        self.calibration = calibration if calibration is not None \
+            else CalibrationMonitor()
+        self.conformal_widening = bool(conformal_widening)
+        # degraded-mode exit hysteresis: this many consecutive successful
+        # predictions before trusting the predictor again (a single good
+        # call after an outage must not flap the gateway's static limits)
+        self.degraded_exit_successes = max(1, int(degraded_exit_successes))
+        self._pred_ok_streak = 0
         self._live: dict[str, ScheduledRequest] = {}
         self._arrival_seq = 0  # tie-break for identical clock readings
         self._now = 0.0
         self.stats = {"predictions": 0, "refreshes": 0, "completions": 0,
-                      "prediction_failures": 0}
+                      "prediction_failures": 0, "posterior_updates": 0,
+                      "conformal_widenings": 0}
         self.degraded = False  # last predictor call failed (see admit_batch)
         self._fallback_dist: LengthDistribution | None = None
 
@@ -335,7 +379,8 @@ class Scheduler:
 
     def admit(self, request_id: str, prompt: str, input_len: int,
               arrival: float | None = None,
-              node_id: int = -1, length_dist=None) -> ScheduledRequest:
+              node_id: int = -1, length_dist=None,
+              tenant: str = "default") -> ScheduledRequest:
         """Register one arriving request — the B = 1 case of
         ``admit_batch`` (batch is the primitive; scalar is sugar).
 
@@ -344,16 +389,18 @@ class Scheduler:
         one node's queue as a masked lexsort over the shared state.
         ``length_dist`` short-circuits the predictor with an already-
         computed prediction (e.g. the cost-aware router's route-time
-        lookup) so the semantic-history search is not paid twice."""
+        lookup) so the semantic-history search is not paid twice.
+        ``tenant`` keys the calibration monitor's rolling statistics."""
         return self.admit_batch(
             [request_id], [prompt], [input_len],
             arrivals=None if arrival is None else [arrival],
             node_ids=node_id,
-            length_dists=None if length_dist is None else [length_dist])[0]
+            length_dists=None if length_dist is None else [length_dist],
+            tenants=[tenant])[0]
 
     def admit_batch(self, request_ids, prompts, input_lens, *,
                     arrivals=None, node_ids=-1,
-                    length_dists=None) -> list[ScheduledRequest]:
+                    length_dists=None, tenants=None) -> list[ScheduledRequest]:
         """Admit a burst of arrivals in one batched pass: one
         ``predict_batch`` over the (unique) prompts, one cost-model
         pushforward sweep, one ``BatchState.add_batch`` append (single
@@ -391,7 +438,10 @@ class Scheduler:
             node_ids = [int(nd) for nd in node_ids]
         length_dists = [None] * b if length_dists is None \
             else list(length_dists)
+        tenants = ["default"] * b if tenants is None \
+            else [str(t) for t in tenants]
         missing = [j for j in range(b) if length_dists[j] is None]
+        degraded_fill: set[int] = set()
         if missing:
             # predict_many: the batched path when it is authoritative for
             # this predictor class, else a scalar-predict loop (honors
@@ -400,7 +450,13 @@ class Scheduler:
                 preds = self.predictor.predict_many(
                     [prompts[j] for j in missing],
                     [input_lens[j] for j in missing])
-                self.degraded = False
+                # exit hysteresis: one healthy call after an outage must
+                # not flap the degraded flag (and with it the gateway's
+                # static limits); require a streak of clean predictions
+                self._pred_ok_streak += len(missing)
+                if self.degraded \
+                        and self._pred_ok_streak >= self.degraded_exit_successes:
+                    self.degraded = False
             except Exception:
                 # predictor / history store down: degrade to a static
                 # prediction-free prior instead of failing admission —
@@ -410,27 +466,61 @@ class Scheduler:
                 # its shed policy to FCFS tail-drop + static limits
                 self.stats["prediction_failures"] += len(missing)
                 self.degraded = True
+                self._pred_ok_streak = 0
                 preds = [self._prediction_free_prior() for _ in missing]
+                degraded_fill = set(missing)
             for j, d in zip(missing, preds):
                 length_dists[j] = d
             self.stats["predictions"] += len(missing)
+        # the pristine admission-time prediction, captured BEFORE any
+        # widening / noise mixing: completion-time scoring (calibration,
+        # hedge weights) must grade the predictor's own output, not the
+        # scheduler's defensive transformations of it.  Degraded-mode
+        # priors carry no per-request information — nothing to grade.
+        pred_dists = [None if j in degraded_fill else length_dists[j]
+                      for j in range(b)]
+        if self.conformal_widening:
+            # conformal widening: tenants whose realized lengths have
+            # been escaping the predicted coverage band get their next
+            # admissions mixed toward the flat prior (deterministic, so
+            # batch/scalar admission parity is preserved)
+            wcache: dict[str, float] = {}
+            for j in range(b):
+                if j in degraded_fill:
+                    continue
+                t = tenants[j]
+                w = wcache.get(t)
+                if w is None:
+                    w = wcache[t] = self.calibration.widen_weight(t)
+                if w > 0.0:
+                    length_dists[j] = length_dists[j].mix_uniform(
+                        w, self.noise_max_len)
+                    self.stats["conformal_widenings"] += 1
         if self.noise_weight > 0.0:  # Fig. 11 robustness experiment
             length_dists = [ld.mix_uniform(self.noise_weight,
                                            self.noise_max_len)
                             for ld in length_dists]
         cost_dists = self.cost_model.distribution_batch(input_lens,
                                                         length_dists)
+        q = self._posterior_q
         srs: list[ScheduledRequest] = []
         for j in range(b):
             # encode arrival order into the float so FCFS ties stay stable
             self._arrival_seq += 1
-            srs.append(ScheduledRequest(
+            sr = ScheduledRequest(
                 request_id=rids[j], prompt=prompts[j],
                 input_len=input_lens[j],
                 arrival=arrivals[j] + self._arrival_seq * 1e-9,
                 length_dist=length_dists[j], cost_dist=cost_dists[j],
-                node_id=node_ids[j]))
+                node_id=node_ids[j], tenant=tenants[j],
+                pred_dist=pred_dists[j])
+            if q is not None:
+                # first mid-flight posterior trigger: the q-quantile of
+                # the stored (post-widening) belief
+                sr.posterior_cut = float(length_dists[j].quantile(q))
+            srs.append(sr)
         pol = self.policy
+        rank_based = getattr(pol, "rank_based", False)
         st = self._state
         for sr in srs:
             self._live[sr.request_id] = sr
@@ -439,7 +529,7 @@ class Scheduler:
                 sr.priority = pol.priority(sr)
                 sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
             return srs
-        if b == 1:
+        if b == 1 and not rank_based:
             # single admission: direct scalar writes, no index arrays —
             # this keeps the ``admit`` sugar as cheap as the pre-batch
             # scalar path for non-bursty callers
@@ -457,10 +547,11 @@ class Scheduler:
                 sr.priority = pol.priority(sr)
                 base = sr.priority
             sr.next_refresh = pol.next_boundary(sr, self.bucket_size)
-            st.add(sr.request_id, sr.cost_dist, sr.length_dist,
-                   arrival=sr.arrival, input_len=sr.input_len,
-                   next_refresh=sr.next_refresh, priority=sr.priority,
-                   base_priority=base, node_id=sr.node_id)
+            i = st.add(sr.request_id, sr.cost_dist, sr.length_dist,
+                       arrival=sr.arrival, input_len=sr.input_len,
+                       next_refresh=sr.next_refresh, priority=sr.priority,
+                       base_priority=base, node_id=sr.node_id)
+            st.posterior_cut[i] = sr.posterior_cut
             return srs
         if pol.has_boundary_batch:
             nrefresh = pol.next_boundary_batch(np.zeros(b, np.int64),
@@ -475,11 +566,16 @@ class Scheduler:
             arrivals=[sr.arrival for sr in srs], input_lens=input_lens,
             next_refreshes=nrefresh, priorities=np.zeros(b),
             base_priorities=np.zeros(b), node_ids=node_ids)
+        st.posterior_cut[idx] = [sr.posterior_cut for sr in srs]
         base, prio = self._admission_priorities(srs, idx)
         st.base_priority[idx] = base
         st.priority[idx] = prio
         for sr, p in zip(srs, prio):
             sr.priority = float(p)
+        if rank_based:
+            # rank-blending policies score against the WHOLE live set:
+            # any membership change invalidates every cached priority
+            st.dirty[:st.n] = True
         return srs
 
     def _admission_priorities(self, srs, idx: np.ndarray
@@ -560,18 +656,29 @@ class Scheduler:
         if generated == sr.generated:
             return
         sr.generated = generated
+        q = self._posterior_q
         st = self._state
         if st is not None:
             i = st.index[request_id]
             st.generated[i] = generated
-            if self.policy.refreshing and generated >= st.next_refresh[i]:
+            if (self.policy.refreshing and generated >= st.next_refresh[i]) \
+                    or (q is not None and generated >= st.posterior_cut[i]):
                 st.dirty[i] = True
             return
-        if self.policy.refreshing and generated >= sr.next_refresh:
-            sr.attained_cost = self.cost_model.attained(sr.input_len, generated)
-            sr.priority = self.policy.priority(sr)
-            sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
-            self.stats["refreshes"] += 1
+        refresh_due = self.policy.refreshing and generated >= sr.next_refresh
+        posterior_due = q is not None and generated >= sr.posterior_cut
+        if not (refresh_due or posterior_due):
+            return
+        sr.attained_cost = self.cost_model.attained(sr.input_len, generated)
+        if posterior_due:
+            # object backend truncates eagerly; the batched backend does
+            # the same work wholesale in refresh().  Both paths see one
+            # progress batch per refresh in the engine/simulator loops,
+            # so chained truncations stay bit-identical.
+            self._posterior_scalar(sr)
+        sr.priority = self.policy.priority(sr)
+        sr.next_refresh = self.policy.next_boundary(sr, self.bucket_size)
+        self.stats["refreshes"] += 1
 
     def on_progress_many(self, request_ids, generated) -> None:
         """Vectorized ``on_progress`` over parallel id/count sequences:
@@ -589,6 +696,8 @@ class Scheduler:
         st.generated[idx] = gens
         if self.policy.refreshing:
             st.dirty[idx] |= gens >= st.next_refresh[idx]
+        if self._posterior_q is not None:
+            st.dirty[idx] |= gens >= st.posterior_cut[idx]
 
     def refresh(self) -> int:
         """Recompute every dirty priority in one batched pass.  Returns
@@ -600,11 +709,17 @@ class Scheduler:
         d = st.dirty[:st.n]
         if not d.any():
             return 0
-        idx = np.flatnonzero(d)
-        st.dirty[:st.n] = False
         pol = self.policy
+        idx = np.flatnonzero(d)
+        if getattr(pol, "rank_based", False):
+            # rank blending is a function of the whole live set — one
+            # dirty row means every rank can shift
+            idx = np.arange(st.n)
+        st.dirty[:st.n] = False
         st.attained[idx] = self.cost_model.attained_batch(
             st.input_len[idx], st.generated[idx])
+        if self._posterior_q is not None:
+            self._posterior_update(idx)
         if pol.has_batch:
             view = st.view(idx)
             if getattr(pol, "time_varying", False) \
@@ -634,16 +749,109 @@ class Scheduler:
         self.stats["refreshes"] += int(idx.size)
         return int(idx.size)
 
+    # ------------------------------------------------- mid-flight posteriors
+
+    def _posterior_fallback(self, generated: int) -> LengthDistribution:
+        """Tail belief for a request that has outrun its ENTIRE predicted
+        support: a flat prior over a grid reaching past the current
+        position (never NaN, never zero-mass — ``mix_uniform(1.0, ...)``
+        lays a uniform grid up to at least 2x the attained length, and
+        ``truncate`` keeps its strictly-larger points)."""
+        point = LengthDistribution(np.array([generated + 1], np.int64),
+                                   np.array([1.0]))
+        flat = point.mix_uniform(
+            1.0, max(self.noise_max_len, 2 * (generated + 1)))
+        out = flat.truncate(generated)
+        assert out is not None  # grid max > generated by construction
+        return out
+
+    def _posterior_scalar(self, sr: ScheduledRequest) -> None:
+        """Object-backend posterior update: condition the stored beliefs
+        on (length > generated, cost > attained) via the compact
+        ``truncate`` oracles; the batched ``_posterior_update`` is
+        engineered bit-identical to this."""
+        g = int(sr.generated)
+        new_len = sr.length_dist.truncate(g)
+        new_cost = sr.cost_dist.truncate(sr.attained_cost)
+        if new_len is None or new_cost is None:
+            # prediction exhausted: rebuild from the flat tail prior
+            new_len = self._posterior_fallback(g)
+            new_cost = self.cost_model.distribution(
+                sr.input_len, new_len.lengths, new_len.probs)
+        sr.length_dist = new_len
+        sr.cost_dist = new_cost
+        sr.posterior_cut = float(new_len.quantile(self._posterior_q))
+        self.stats["posterior_updates"] += 1
+
+    def _posterior_update(self, idx: np.ndarray) -> None:
+        """Batched posterior update over the rows in ``idx`` that crossed
+        their posterior cut: ONE vectorized ``truncate_rows`` pass over
+        the (n, k) length and cost blocks (supports stay absolute; dead
+        columns carry exact-0 probs, inert to every batched consumer),
+        then a vectorized requantile for the next cut.  Rows whose whole
+        predicted mass is already behind them fall back to the same
+        scalar flat-tail rebuild as the object backend.  Requires
+        ``st.attained`` to be current for the rows (refresh() updates it
+        first)."""
+        st = self._state
+        q = self._posterior_q
+        hit = st.generated[idx] >= st.posterior_cut[idx]
+        if not hit.any():
+            return
+        rows = idx[hit]
+        gens = st.generated[rows].astype(np.float64)
+        new_len, len_ex = truncate_rows(st.len_sup[rows],
+                                        st.len_probs[rows], gens)
+        new_cost, cost_ex = truncate_rows(st.cost_sup[rows],
+                                          st.cost_probs[rows],
+                                          st.attained[rows])
+        ex = len_ex | cost_ex
+        ok_rows = rows[~ex]
+        if ok_rows.size:
+            st.len_probs[ok_rows] = new_len[~ex]
+            st.cost_probs[ok_rows] = new_cost[~ex]
+            # sequential cumsum mean / quantile: bit-identical to the
+            # scalar oracles (dead columns add exact 0.0)
+            st.cost_mean[ok_rows] = np.cumsum(
+                st.cost_sup[ok_rows] * st.cost_probs[ok_rows],
+                axis=1)[:, -1]
+            cdf = np.cumsum(st.len_probs[ok_rows], axis=1)
+            qi = np.minimum((cdf < q).sum(axis=1), st.k - 1)
+            st.posterior_cut[ok_rows] = st.len_sup[
+                ok_rows, qi]
+        for i in rows[ex]:
+            g = int(st.generated[i])
+            ld = self._posterior_fallback(g)
+            cd = self.cost_model.distribution(int(st.input_len[i]),
+                                              ld.lengths, ld.probs)
+            k_needed = max(ld.lengths.shape[0], cd.support.shape[0])
+            if k_needed > st.k:
+                st._grow_cols(k_needed)
+            st._write_row(st.len_sup, st.len_probs, i, ld.lengths, ld.probs)
+            st._write_row(st.cost_sup, st.cost_probs, i,
+                          cd.support, cd.probs)
+            st.cost_mean[i] = cd.mean
+            st.posterior_cut[i] = float(ld.quantile(q))
+        self.stats["posterior_updates"] += int(rows.size)
+
     def tokens_to_refresh(self, request_id: str) -> float:
-        """Output tokens until this request's next priority refresh
-        (simulator fast-forward bound)."""
+        """Output tokens until this request's next priority refresh OR
+        posterior update, whichever comes first (simulator fast-forward
+        bound — fast-forwarding past a posterior cut would skip the
+        belief update that reorders the queue)."""
         st = self._state
         if st is not None:
             self.refresh()
             i = st.index[request_id]
-            return float(st.next_refresh[i] - st.generated[i])
+            bound = st.next_refresh[i]
+            if self._posterior_q is not None:
+                bound = min(bound, st.posterior_cut[i])
+            return float(bound - st.generated[i])
         sr = self._live[request_id]
-        return sr.next_refresh - sr.generated
+        bound = sr.next_refresh
+        if self._posterior_q is not None:
+            bound = min(bound, sr.posterior_cut)
+        return bound - sr.generated
 
     def min_tokens_to_refresh(self, request_ids) -> float:
         """Vectorized min over ``tokens_to_refresh`` (simulator hot path)."""
@@ -653,20 +861,36 @@ class Scheduler:
         self.refresh()
         idx = np.fromiter((st.index[r] for r in request_ids), np.int64,
                           len(request_ids))
-        return float(np.min(st.next_refresh[idx] - st.generated[idx]))
+        bounds = st.next_refresh[idx]
+        if self._posterior_q is not None:
+            bounds = np.minimum(bounds, st.posterior_cut[idx])
+        return float(np.min(bounds - st.generated[idx]))
 
     def on_complete(self, request_id: str, output_len: int) -> None:
-        """Request finished: feed the predictor's history and drop state."""
+        """Request finished: feed the predictor's history, grade the
+        admission-time prediction (calibration window + hedge weights)
+        and drop state."""
         sr = self._live.pop(request_id)
         self.predictor.observe(sr.prompt, sr.input_len, output_len)
+        if sr.pred_dist is not None:
+            self.calibration.observe(sr.tenant, sr.pred_dist, output_len)
+        if hasattr(self.policy, "observe_outcome"):
+            # hedging controllers race their experts on realized error;
+            # pred_dist=None (degraded-mode prior) is a no-op for them
+            self.policy.observe_outcome(sr.pred_dist, output_len)
+            self.stats["hedge"] = self.policy.snapshot()
         if self._state is not None:
             self._state.remove(request_id)
+            if getattr(self.policy, "rank_based", False) and self._state.n:
+                self._state.dirty[:self._state.n] = True
         self.stats["completions"] += 1
 
     def on_abort(self, request_id: str) -> None:
         if self._live.pop(request_id, None) is not None \
                 and self._state is not None:
             self._state.remove(request_id)
+            if getattr(self.policy, "rank_based", False) and self._state.n:
+                self._state.dirty[:self._state.n] = True
 
     # ------------------------------------------------------------- queries
 
@@ -680,6 +904,7 @@ class Scheduler:
             sr.priority = float(st.priority[i])
             sr.attained_cost = float(st.attained[i])
             sr.next_refresh = float(st.next_refresh[i])
+            sr.posterior_cut = float(st.posterior_cut[i])
         return sr
 
     def __contains__(self, request_id: str) -> bool:
@@ -691,6 +916,25 @@ class Scheduler:
     @property
     def preemptive(self) -> bool:
         return self.policy.preemptive
+
+    @property
+    def posterior_quantile(self) -> float | None:
+        return self._posterior_q
+
+    @property
+    def runtime_refreshing(self) -> bool:
+        """Whether per-iteration progress can change priorities: true for
+        refreshing policies AND whenever mid-flight posteriors are on (a
+        posterior cut reorders the queue even under a frozen policy) —
+        the simulator keys its fast-forward decision on this, not on
+        ``policy.refreshing`` alone."""
+        return self.policy.refreshing or self._posterior_q is not None
+
+    def calibration_summary(self) -> dict:
+        """Per-tenant rolling calibration table (see
+        ``robust.CalibrationMonitor.summary``) — the surface the engine
+        metrics and the gateway summary re-export."""
+        return self.calibration.summary()
 
     def set_now(self, now: float) -> None:
         """Inject the current (sim or wall) time; time-varying policies

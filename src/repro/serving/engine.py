@@ -392,7 +392,8 @@ class ServingEngine:
             [r.request_id for r in requests],
             [r.prompt for r in requests],
             [r.input_len for r in requests],
-            arrivals=arrivals, length_dists=length_dists)
+            arrivals=arrivals, length_dists=length_dists,
+            tenants=[r.tenant for r in requests])
         for r, arrival in zip(requests, arrivals):
             r.arrival = arrival
             self._requests[r.request_id] = r
@@ -792,6 +793,11 @@ class ServingEngine:
         self._release(r)
         self.scheduler.on_complete(r.request_id, r.generated)
         self.metrics.completed += 1
+        if hasattr(self.scheduler, "calibration_summary"):
+            # per-tenant coverage / CRPS over the rolling window — kept
+            # current on every completion so metrics snapshots mid-run
+            # see live calibration, not just the final state
+            self.metrics.calibration = self.scheduler.calibration_summary()
 
     def _relieve_pressure(self) -> None:
         """Decode growth that returned ``grow() == False`` is surfaced

@@ -82,6 +82,10 @@ class GatewayConfig:
     retry_backoff_s: float = 0.05          # doubles per attempt
     shed_policy: str = "cost"              # "cost" | "tail"
     shed_quantile: float = 0.9             # CostDistribution upper quantile
+    # exit hysteresis for the gateway-side degraded flag: this many
+    # consecutive successful predictions before leaving the static
+    # degraded_max_inflight limit (one lucky call must not flap it)
+    degraded_exit_successes: int = 4
 
 
 @dataclass
@@ -114,6 +118,7 @@ class Gateway:
         self._offered: dict[str, ServeRequest] = {}
         self.dispositions: dict[str, tuple[str, str]] = {}
         self._degraded = False   # last gateway-side prediction failed
+        self._ok_streak = 0      # consecutive successes (exit hysteresis)
 
     # ------------------------------------------------------------- state
 
@@ -147,16 +152,23 @@ class Gateway:
         """Predicted-cost shed score: the ``shed_quantile`` of the
         request's cost distribution (uncertainty-aware — heavy right
         tails score high and are shed first).  A predictor failure flips
-        the gateway into degraded mode and scores 0 (FCFS fallback)."""
+        the gateway into degraded mode and scores 0 (FCFS fallback);
+        leaving degraded mode requires ``degraded_exit_successes``
+        consecutive clean predictions (exit hysteresis — a single lucky
+        call after an outage must not flap the static limits)."""
         sched = self.engine.scheduler
         try:
             dist = sched.predictor.predict(r.prompt, r.input_len)
             cost = sched.cost_model.distribution_batch(
                 [r.input_len], [dist])[0]
-            self._degraded = False
+            self._ok_streak += 1
+            if self._degraded \
+                    and self._ok_streak >= self.config.degraded_exit_successes:
+                self._degraded = False
             return float(cost.quantile(self.config.shed_quantile)), dist
         except Exception:
             self._degraded = True
+            self._ok_streak = 0
             return 0.0, None
 
     # -------------------------------------------------------------- offer
@@ -340,6 +352,36 @@ class Gateway:
             f"gateway: drain budget ({max_steps}) exhausted — "
             f"queued={self.queued} retrying={len(self._retry)} "
             f"inflight={self.inflight}; engine={self.engine.stall_report()}")
+
+    # ------------------------------------------------------------- summary
+
+    def summary(self) -> dict:
+        """Operator-facing gateway snapshot: live admission state, the
+        disposition ledger rolled up by (kind, reason), and the adaptive-
+        robustness surfaces — per-tenant calibration statistics from the
+        scheduler's ``CalibrationMonitor`` and the hedge-weight snapshot
+        when the engine schedules with ``HedgedPolicy``."""
+        kinds: dict[str, int] = {}
+        reasons: dict[str, int] = {}
+        for kind, reason in self.dispositions.values():
+            kinds[kind] = kinds.get(kind, 0) + 1
+            key = f"{kind.lower()}:{reason}"
+            reasons[key] = reasons.get(key, 0) + 1
+        out = {
+            "queued": self.queued,
+            "inflight": self.inflight,
+            "retrying": len(self._retry),
+            "degraded": self.degraded,
+            "dispositions": kinds,
+            "disposition_reasons": reasons,
+        }
+        sched = self.engine.scheduler
+        if hasattr(sched, "calibration_summary"):
+            out["calibration"] = sched.calibration_summary()
+        pol = getattr(sched, "policy", None)
+        if hasattr(pol, "snapshot"):
+            out["hedge"] = pol.snapshot()
+        return out
 
     # ---------------------------------------------------------- invariants
 

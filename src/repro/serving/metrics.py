@@ -8,7 +8,7 @@ from one model (asserted in tests/test_serving_engine.py).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -51,6 +51,10 @@ class EngineMetrics:
                                  # later aborted / shed / timed out
     swap_in_faults: int = 0      # unexpected swap_in failures that fell
                                  # back to recompute (pool had room)
+    # per-tenant rolling calibration table (coverage@q, CRPS, observed/
+    # predicted length) — refreshed by the engine on every completion
+    # from the scheduler's CalibrationMonitor; empty when untracked
+    calibration: dict = field(default_factory=dict)
 
     def _failure_counters(self) -> dict:
         return {
@@ -66,7 +70,8 @@ class EngineMetrics:
         done = [r for r in requests
                 if np.isfinite(getattr(r, "ttlt", np.nan))]
         if not done:
-            return {"completed": 0, **self._failure_counters()}
+            return {"completed": 0, "calibration": self.calibration,
+                    **self._failure_counters()}
         ttft = np.array([r.ttft for r in done])
         ttlt = np.array([r.ttlt for r in done])
         gen = np.array([r.generated for r in done], np.float64)
@@ -101,5 +106,6 @@ class EngineMetrics:
             "swap_outs": self.swap_outs,
             "swap_ins": self.swap_ins,
             "modeled_swap_s": self.modeled_swap_s,
+            "calibration": self.calibration,
             **self._failure_counters(),
         }

@@ -406,6 +406,10 @@ class NodeSchedulerView:
         return self.scheduler.policy
 
     @property
+    def runtime_refreshing(self) -> bool:
+        return self.scheduler.runtime_refreshing
+
+    @property
     def preemptive(self) -> bool:
         return self.scheduler.preemptive
 

@@ -462,7 +462,10 @@ class NodeSimulator:
         steps = max(0, min(remaining)) if batch else 0
         if mid_prefill:
             steps = min(steps, 1)
-        if batch and self.scheduler.policy.refreshing:
+        # runtime_refreshing also covers mid-flight posterior updates
+        # (frozen policies still reorder when a posterior cut is crossed)
+        if batch and getattr(self.scheduler, "runtime_refreshing",
+                             self.scheduler.policy.refreshing):
             to_refresh = self.scheduler.min_tokens_to_refresh(decoding)
             if to_refresh > 0 and np.isfinite(to_refresh):
                 steps = min(steps, int(to_refresh))

@@ -184,13 +184,49 @@ class SimRequest:
     prefix_group: str = ""
     shared_prefix_len: int = 0
     sharable_prefix_len: int = 0
+    # multiplicative drift applied to this request's true output length
+    # (generate_workload(drift_scale=...)); 1.0 = undrifted.  Recorded so
+    # drift-aware baselines (e.g. the regret bench's oracle) can
+    # reconstruct the drifted truth a predictor trained on the original
+    # clusters cannot see.
+    drift_factor: float = 1.0
+
+
+def _drift_factor(i: int, n: int, scale: float, start: float,
+                  ramp: float, mode: str) -> float:
+    """Length-scale multiplier for request ``i`` of ``n`` under a drift
+    schedule.  ``start``/``ramp`` are fractions of the trace: drift
+    begins at ``start * n`` and (for ``ramp`` mode) reaches full
+    ``scale`` after another ``ramp * n`` requests.  Modes:
+
+      * ``ramp``      — linear 1 -> scale over the ramp window, then flat
+                        (a dataset-mix shift settling in);
+      * ``step``      — instant jump to ``scale`` at ``start`` (a
+                        deployment flipping the traffic);
+      * ``oscillate`` — alternates 1x / ``scale`` every ``ramp * n``
+                        requests after ``start`` (the adversarial case:
+                        any frozen correction is wrong half the time).
+    """
+    pos = i - start * n
+    if pos < 0:
+        return 1.0
+    if mode == "step":
+        return scale
+    span = max(1.0, ramp * n)
+    if mode == "oscillate":
+        return scale if int(pos // span) % 2 == 0 else 1.0
+    return 1.0 + (scale - 1.0) * min(1.0, pos / span)  # ramp
 
 
 def generate_workload(profiles: list[DatasetProfile], n_requests: int,
                       rps: float, seed: int = 0, *,
                       burst_factor: float = 1.0,
                       burst_period_s: float = 10.0,
-                      burst_duty: float = 0.2) -> list[SimRequest]:
+                      burst_duty: float = 0.2,
+                      drift_scale: float = 1.0,
+                      drift_start: float = 0.5,
+                      drift_ramp: float = 0.25,
+                      drift_mode: str = "ramp") -> list[SimRequest]:
     """Poisson arrivals at ``rps``; each request uniformly picks a dataset
     profile then a cluster (mixed-dataset experiment when len(profiles)>1).
 
@@ -200,7 +236,19 @@ def generate_workload(profiles: list[DatasetProfile], n_requests: int,
     gateway's admission control is tested against.  ``burst_factor=1``
     (default) draws the exact same RNG sequence as the unmodulated
     generator, so every seeded workload in existing experiments is
-    unchanged."""
+    unchanged.
+
+    ``drift_scale != 1`` injects *prediction drift*: true output lengths
+    are multiplied by a per-request factor following ``drift_mode``
+    (see ``_drift_factor``) while prompts/clusters are untouched — so
+    any predictor trained or seeded on the original clusters is
+    honestly, progressively wrong.  Applied AFTER sampling (same
+    RNG-compatibility pattern as ``burst_factor``): with the default
+    scale of 1.0 the trace is bit-identical to the undrifted one, and a
+    drifted trace differs only in ``true_output_len``/``drift_factor``.
+    """
+    if drift_mode not in ("ramp", "step", "oscillate"):
+        raise ValueError(f"unknown drift_mode {drift_mode!r}")
     rng = np.random.default_rng(seed)
     t = 0.0
     out: list[SimRequest] = []
@@ -212,14 +260,25 @@ def generate_workload(profiles: list[DatasetProfile], n_requests: int,
         t += float(rng.exponential(1.0 / rate))
         prof = profiles[int(rng.integers(len(profiles)))]
         cluster = prof.clusters[int(rng.integers(len(prof.clusters)))]
+        # draw order (prompt, input, output) is part of the seed contract
+        prompt = cluster.sample_prompt(rng)
+        input_len = cluster.sample_input_len(rng)
+        tol = cluster.sample_output_len(rng)
+        df = 1.0
+        if drift_scale != 1.0:
+            df = _drift_factor(i, n_requests, drift_scale, drift_start,
+                               drift_ramp, drift_mode)
+            if df != 1.0:
+                tol = max(1, int(round(tol * df)))
         out.append(SimRequest(
             request_id=f"req-{i:06d}",
             arrival=t,
-            prompt=cluster.sample_prompt(rng),
-            input_len=cluster.sample_input_len(rng),
-            true_output_len=cluster.sample_output_len(rng),
+            prompt=prompt,
+            input_len=input_len,
+            true_output_len=tol,
             dataset=prof.name,
-            cluster=cluster))
+            cluster=cluster,
+            drift_factor=df))
     return out
 
 

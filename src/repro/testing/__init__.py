@@ -5,9 +5,10 @@ benchmark harness drives the same fault matrix CI asserts on.
 """
 
 from .faults import (FlakyPredictor, KVFaultError, PredictorUnavailable,
-                     VirtualClock, assert_engine_quiesced, inject_kv_fault)
+                     VirtualClock, assert_engine_quiesced, inject_kv_fault,
+                     scale_distribution)
 from .tolerance import TokenMismatch, assert_tokens_close
 
 __all__ = ["FlakyPredictor", "KVFaultError", "PredictorUnavailable",
            "TokenMismatch", "VirtualClock", "assert_engine_quiesced",
-           "assert_tokens_close", "inject_kv_fault"]
+           "assert_tokens_close", "inject_kv_fault", "scale_distribution"]

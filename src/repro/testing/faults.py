@@ -38,7 +38,24 @@ import numpy as np
 from ..core.predictor import LengthDistribution, Predictor
 
 __all__ = ["VirtualClock", "PredictorUnavailable", "KVFaultError",
-           "FlakyPredictor", "inject_kv_fault", "assert_engine_quiesced"]
+           "FlakyPredictor", "scale_distribution", "inject_kv_fault",
+           "assert_engine_quiesced"]
+
+
+def scale_distribution(dist: LengthDistribution, scale: float,
+                       bias: float = 0.0) -> LengthDistribution:
+    """Length-scale a predicted distribution: lengths become
+    ``round(length * scale + bias)`` (floored at 1); collided support
+    points merge their mass.  Used by the ``drift`` fault mode and by
+    the drift bench's oracle-truth construction, so both sides of the
+    regret comparison transform predictions identically."""
+    lens = np.maximum(
+        np.round(dist.lengths * float(scale) + float(bias)), 1.0
+    ).astype(np.int64)
+    uniq, inv = np.unique(lens, return_inverse=True)
+    probs = np.zeros(uniq.shape[0])
+    np.add.at(probs, inv, dist.probs)
+    return LengthDistribution(uniq, probs)
 
 
 class VirtualClock:
@@ -77,14 +94,22 @@ class FlakyPredictor(Predictor):
     modes: ``outage`` raises ``PredictorUnavailable``; ``corrupt``
     returns a point mass at ``corrupt_scale *`` the true predicted mean
     (confidently, arbitrarily wrong); ``stale`` replays the first answer
-    it ever produced (a stuck / delayed predictor).
+    it ever produced (a stuck / delayed predictor); ``drift`` keeps
+    answering confidently but with a length scale that ramps from 1x at
+    the window's start to ``drift_scale`` at its end (plus an additive
+    ``drift_bias`` ramping the same way) — the predictor nobody notices
+    is broken, because it never throws.  Unlike the other modes, drift
+    is the failure the scheduler can only detect *statistically*
+    (calibration monitoring) and survive *adaptively* (posteriors,
+    hedging) — see repro.core.robust.
     """
 
-    MODES = ("outage", "corrupt", "stale")
+    MODES = ("outage", "corrupt", "stale", "drift")
 
     def __init__(self, inner: Predictor, mode: str = "outage",
                  fail_after: int = 0, n_failures: int | None = None,
-                 corrupt_scale: float = 16.0):
+                 corrupt_scale: float = 16.0, drift_scale: float = 2.0,
+                 drift_bias: float = 0.0):
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
         self.inner = inner
@@ -93,6 +118,8 @@ class FlakyPredictor(Predictor):
         self.n_failures = (float("inf") if n_failures is None
                            else int(n_failures))
         self.corrupt_scale = float(corrupt_scale)
+        self.drift_scale = float(drift_scale)
+        self.drift_bias = float(drift_bias)
         self.calls = 0
         self.faults = 0
         self._stale: LengthDistribution | None = None
@@ -121,6 +148,12 @@ class FlakyPredictor(Predictor):
             wrong = max(1, int(dist.mean * self.corrupt_scale))
             return LengthDistribution(np.array([wrong], np.int64),
                                       np.array([1.0]))
+        if self.mode == "drift":
+            i = self.calls - 1  # _in_window already advanced the counter
+            frac = 1.0 if not np.isfinite(self.n_failures) else \
+                min(1.0, (i - self.fail_after + 1) / self.n_failures)
+            s = 1.0 + (self.drift_scale - 1.0) * frac
+            return scale_distribution(dist, s, self.drift_bias * frac)
         return dist  # stale mode before any healthy call was seen
 
     def predict_batch(self, prompts, input_lens):

@@ -222,8 +222,25 @@ def test_scheduler_degrades_and_recovers_on_predictor_outage():
     assert sched.degraded
     assert sched.stats["prediction_failures"] == 2
     assert sched.order(["d0", "d1"])           # still schedulable
+    # exit hysteresis (default degraded_exit_successes=4): a single
+    # healthy prediction must NOT flap the flag back...
     sched.admit("d2", "p2", 8, arrival=0.1)    # window over: healthy again
+    assert sched.degraded
+    # ...but a streak of clean calls does (a batch of m counts m)
+    sched.admit_batch(["d3", "d4", "d5"], ["p3", "p4", "p5"], [8, 8, 8],
+                      arrivals=[0.2, 0.2, 0.2])
     assert not sched.degraded
+    # a fresh failure resets the streak
+    flaky2 = FlakyPredictor(SemanticHistoryPredictor(), mode="outage",
+                            fail_after=0, n_failures=1)
+    sched2 = Scheduler(policy=make_policy("sagesched"), predictor=flaky2,
+                       degraded_exit_successes=2)
+    sched2.admit("e0", "p0", 8, arrival=0.0)
+    assert sched2.degraded
+    sched2.admit("e1", "p1", 8, arrival=0.1)
+    assert sched2.degraded                     # streak 1 < 2
+    sched2.admit("e2", "p2", 8, arrival=0.2)
+    assert not sched2.degraded                 # streak 2 >= 2
 
 
 # --------------------------------------------- cluster node kill / slow

@@ -1,0 +1,423 @@
+"""Adaptive robustness under prediction drift (PR 10).
+
+Covers the acceptance criteria:
+  * ``truncate_rows`` is bit-identical to the compact scalar
+    ``LengthDistribution.truncate`` oracle, and its exhausted flag fires
+    exactly when a request outran its whole predicted support;
+  * mid-flight posterior updates are bit-identical between the eager
+    scalar object path and the batched numpy path (pallas float32-close),
+    end-to-end through the simulator;
+  * exhausted posteriors fall back to a proper tail belief — never a
+    NaN / zero-mass row — and an empty-state refresh is a no-op;
+  * ``HedgedPolicy`` order oracles: with the hedge saturated toward one
+    expert, the blended order equals that expert's own scheduler order;
+  * hedge weight dynamics (good predictions -> w_trust up, drifted
+    predictions -> w_free up, clamp keeps both experts alive);
+  * ``prediction_loss`` / ``crps`` / ``CalibrationMonitor`` unit math,
+    and the scheduler actually applying conformal widening;
+  * ``FlakyPredictor(mode="drift")`` and ``generate_workload(drift_*)``
+    fault injection, including RNG seed compatibility;
+  * ``Gateway.summary()`` surfacing calibration + hedge state.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CalibrationMonitor, LengthDistribution, Predictor,
+                        Scheduler, crps, make_policy, prediction_loss,
+                        truncate_rows)
+from repro.core.policies import HedgedPolicy
+from repro.models import build_model
+from repro.serving import Gateway, GatewayConfig, ServeRequest, ServingEngine
+from repro.simulator import generate_workload, make_profile, simulate
+from repro.testing import FlakyPredictor, VirtualClock, scale_distribution
+
+
+def random_length_dist(rng, max_k=24, max_len=4000) -> LengthDistribution:
+    k = int(rng.integers(1, max_k + 1))
+    lens = np.sort(rng.choice(np.arange(1, max_len), k, replace=False))
+    return LengthDistribution(lens, rng.dirichlet(np.ones(k)))
+
+
+class FixedPredictor(Predictor):
+    """Deterministic prompt-keyed predictor (embedding-free)."""
+
+    def __init__(self, pool=32, seed=0, max_len=4000):
+        rng = np.random.default_rng(seed)
+        self.dists = [random_length_dist(rng, max_len=max_len)
+                      for _ in range(pool)]
+
+    def predict(self, prompt, input_len):
+        return self.dists[zlib.crc32(prompt.encode()) % len(self.dists)]
+
+
+class TinyPredictor(Predictor):
+    """Every prediction is a small, easily-outrun distribution."""
+
+    def predict(self, prompt, input_len):
+        return LengthDistribution(np.array([2, 4, 6]),
+                                  np.array([0.2, 0.5, 0.3]))
+
+
+# ---------------------------------------------------------- truncate_rows
+
+def test_truncate_rows_matches_scalar_truncate_bitwise():
+    rng = np.random.default_rng(1)
+    n, k = 40, 16
+    support = np.sort(rng.integers(1, 500, (n, k)), axis=1).astype(float)
+    probs = rng.dirichlet(np.ones(k), n)
+    cut = rng.integers(0, 400, n).astype(float)
+    out, exhausted = truncate_rows(support, probs, cut)
+    for i in range(n):
+        d = LengthDistribution(support[i].astype(np.int64), probs[i])
+        t = d.truncate(cut[i])
+        if t is None:
+            assert exhausted[i]
+            np.testing.assert_array_equal(out[i], probs[i])  # untouched
+            continue
+        assert not exhausted[i]
+        alive = support[i] > cut[i]
+        # dead columns carry exact zeros; survivors match the compact
+        # scalar oracle bit for bit (same sequential-cumsum renormalizer)
+        assert np.all(out[i][~alive] == 0.0)
+        np.testing.assert_array_equal(out[i][alive], t.probs)
+        assert np.cumsum(out[i])[-1] == np.cumsum(t.probs)[-1]
+
+
+def test_truncate_rows_exhausted_and_padded_rows():
+    # row 0 fully outrun, row 1 partially, row 2 has zero-prob padding
+    support = np.array([[2., 4., 6.], [2., 4., 6.], [2., 4., 4.]])
+    probs = np.array([[.2, .5, .3], [.2, .5, .3], [.4, .6, 0.]])
+    out, ex = truncate_rows(support, probs, np.array([10., 3., 2.]))
+    assert list(ex) == [True, False, False]
+    np.testing.assert_array_equal(out[0], probs[0])
+    np.testing.assert_allclose(out[1], [0., .5 / .8, .3 / .8])
+    np.testing.assert_allclose(out[2], [0., 1., 0.])  # pad stays dead
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------- mid-flight posteriors
+
+def _posterior_pair(backend_a, backend_b, predictor_cls=FixedPredictor,
+                    n=48, q=0.5, seed=3):
+    rng = np.random.default_rng(seed)
+    scheds = [Scheduler(policy=make_policy("sagesched"),
+                        predictor=predictor_cls(max_len=600),
+                        priority_backend=b, bucket_size=50,
+                        posterior_quantile=q)
+              for b in (backend_a, backend_b)]
+    for i in range(n):
+        il = int(rng.integers(1, 1500))
+        for s in scheds:
+            s.admit(f"r{i}", f"p{i % 11}", il, arrival=float(i))
+    for i in range(n):
+        g = int(rng.integers(0, 800))
+        for s in scheds:
+            s.on_progress(f"r{i}", g)
+    for s in scheds:
+        s.set_now(float(n))
+        s.refresh()
+    return scheds
+
+
+def test_posterior_object_numpy_bit_identical():
+    obj, num = _posterior_pair("object", "numpy")
+    assert obj.stats["posterior_updates"] > 0
+    assert obj.stats["posterior_updates"] == num.stats["posterior_updates"]
+    for i in range(len(obj)):
+        a, b = obj.get(f"r{i}"), num.get(f"r{i}")
+        assert a.priority == b.priority, f"r{i}"
+        assert a.posterior_cut == b.posterior_cut, f"r{i}"
+    assert obj.order() == num.order()
+
+
+def test_posterior_pallas_close_to_oracle():
+    obj, pal = _posterior_pair("object", "pallas", n=32)
+    assert pal.stats["posterior_updates"] > 0
+    p_obj = np.array([obj.get(f"r{i}").priority for i in range(32)])
+    p_pal = np.array([pal.get(f"r{i}").priority for i in range(32)])
+    np.testing.assert_allclose(p_pal, p_obj, rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["object", "numpy"])
+def test_posterior_exhausted_fallback_never_nan(backend):
+    """A request that outruns its whole predicted support gets a proper
+    flat tail belief — finite, unit-mass, with a finite next cut."""
+    sched = Scheduler(policy=make_policy("sagesched"),
+                      predictor=TinyPredictor(), priority_backend=backend,
+                      posterior_quantile=0.5)
+    sched.admit("r0", "p", 100, arrival=0.0)
+    sched.on_progress("r0", 50)   # far past the support max of 6
+    sched.refresh()
+    sr = sched.get("r0")
+    assert sched.stats["posterior_updates"] >= 1
+    assert np.isfinite(sr.priority)
+    assert np.isfinite(sr.posterior_cut)
+    assert sr.posterior_cut > 50  # next trigger is beyond current progress
+    if backend == "numpy":
+        st = sched._state
+        i = st.index["r0"]
+        row = st.len_probs[i, :st.k]
+        assert np.isfinite(row).all()
+        assert np.cumsum(row)[-1] == pytest.approx(1.0)
+        # the fallback's support must actually extend past progress
+        assert st.len_sup[i, :st.k].max() > 50
+
+
+def test_posterior_refresh_on_empty_state_is_noop():
+    sched = Scheduler(policy=make_policy("sagesched"),
+                      predictor=TinyPredictor(),
+                      posterior_quantile=0.9)
+    sched.refresh()   # B = 0: must not touch any (empty) array
+    assert sched.stats["posterior_updates"] == 0
+    assert len(sched) == 0
+
+
+def test_posterior_simulator_end_to_end_identical():
+    """Full NodeSimulator runs with posterior updates enabled stay
+    *identical* between the object oracle and the batched numpy path."""
+    profiles = [make_profile(n) for n in ("sharegpt", "alpaca")]
+    reqs = generate_workload(profiles, 200, rps=10.0, seed=5)
+
+    def run(backend):
+        sched = Scheduler(policy=make_policy("sagesched"),
+                          predictor=FixedPredictor(seed=1, max_len=300),
+                          priority_backend=backend,
+                          posterior_quantile=0.9)
+        return simulate(reqs, sched)
+
+    a, b = run("object"), run("numpy")
+    assert a.scheduler_stats["posterior_updates"] > 0
+    assert a.scheduler_stats == b.scheduler_stats
+    assert a.makespan == b.makespan
+    assert a.n_preemptions == b.n_preemptions
+    for m1, m2 in zip(a.metrics, b.metrics):
+        assert m1.request_id == m2.request_id
+        assert m1.ttft == m2.ttft and m1.ttlt == m2.ttlt
+
+
+def test_runtime_refreshing_property():
+    s1 = Scheduler(policy=make_policy("fcfs"), predictor=TinyPredictor())
+    assert not s1.runtime_refreshing
+    s2 = Scheduler(policy=make_policy("fcfs"), predictor=TinyPredictor(),
+                   posterior_quantile=0.9)
+    assert s2.runtime_refreshing  # posterior cuts are runtime boundaries
+
+
+# ------------------------------------------------------------ hedged order
+
+def _admit_same(scheds, n=40, seed=7):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        il = int(rng.integers(1, 1500))
+        for s in scheds:
+            s.admit(f"r{i}", f"p{i % 9}", il, arrival=float(i))
+    for s in scheds:
+        s.set_now(float(n))
+
+
+def test_hedged_rejects_object_backend_and_scalar_priority():
+    with pytest.raises(ValueError):
+        Scheduler(policy=make_policy("hedged"), priority_backend="object")
+    with pytest.raises(RuntimeError):
+        HedgedPolicy().priority(None)
+
+
+def test_hedged_order_saturated_trusting_matches_sagesched():
+    hedged = Scheduler(policy=HedgedPolicy(w_trust=1.0),
+                       predictor=FixedPredictor(seed=2))
+    pure = Scheduler(policy=make_policy("sagesched"),
+                     predictor=FixedPredictor(seed=2))
+    _admit_same([hedged, pure])
+    assert hedged.order() == pure.order()
+
+
+def test_hedged_order_saturated_free_matches_fcfs():
+    hedged = Scheduler(policy=HedgedPolicy(w_trust=0.0),
+                       predictor=FixedPredictor(seed=2))
+    pure = Scheduler(policy=make_policy("fcfs"),
+                     predictor=FixedPredictor(seed=2))
+    _admit_same([hedged, pure])
+    assert hedged.order() == pure.order()
+
+
+def test_hedge_weight_dynamics_and_clamp():
+    pol = HedgedPolicy(max_len=4096)
+    sharp_right = LengthDistribution(np.array([100]), np.array([1.0]))
+    for _ in range(30):
+        pol.observe_outcome(sharp_right, 100)
+    w_t, w_f = pol.weights
+    assert w_t > 0.95
+    # clamp: the free expert is never fully abandoned
+    assert w_f >= np.exp(-pol.max_log_ratio) / (1 + np.exp(-pol.max_log_ratio))
+    # confidently-wrong predictions drive weight back toward FCFS
+    for _ in range(30):
+        pol.observe_outcome(sharp_right, 2000)
+    w_t2, _ = pol.weights
+    assert w_t2 < 0.5
+    # degraded-mode admissions (no prediction) are not scored
+    n = pol.updates
+    pol.observe_outcome(None, 50)
+    assert pol.updates == n
+    assert pol.weights[0] + pol.weights[1] == pytest.approx(1.0)
+
+
+def test_hedged_scheduler_updates_weights_on_complete():
+    sched = Scheduler(policy=make_policy("hedged"),
+                      predictor=TinyPredictor())
+    sched.admit("r0", "p", 10, arrival=0.0)
+    sched.on_complete("r0", output_len=500)   # way past the tiny support
+    assert sched.stats["hedge"]["updates"] == 1
+    assert sched.stats["hedge"]["w_trust"] < 0.5
+
+
+# ---------------------------------------------- loss / crps / calibration
+
+def test_prediction_loss_anchors():
+    point = LengthDistribution(np.array([100]), np.array([1.0]))
+    assert prediction_loss(point, 100, 4096) < 0.25      # sharp and right
+    assert prediction_loss(point, 3000, 4096) > 0.75     # confidently wrong
+    grid = np.arange(1, 4097)
+    flat = LengthDistribution(grid, np.full(grid.size, 1 / grid.size))
+    assert prediction_loss(flat, 500, 4096) == pytest.approx(0.5, abs=0.05)
+
+
+def test_crps_anchors():
+    # point mass on the truth: perfect score
+    assert crps(np.array([50.]), np.array([1.0]), 50) == 0.0
+    # point mass off by d: crps == |d| for a deterministic forecast
+    assert crps(np.array([50.]), np.array([1.0]), 80) == pytest.approx(30.0)
+    # more bias -> worse score
+    a = crps(np.array([40., 60.]), np.array([.5, .5]), 50)
+    b = crps(np.array([40., 60.]), np.array([.5, .5]), 200)
+    assert 0 < a < b
+
+
+def test_calibration_monitor_coverage_and_widening():
+    mon = CalibrationMonitor(window=64, quantiles=(0.5, 0.9),
+                             min_samples=8, widen_gain=2.0, max_widen=0.5)
+    wide = LengthDistribution(np.array([10, 100, 1000]),
+                              np.array([.1, .8, .1]))
+    assert mon.widen_weight("t") == 0.0   # unseen tenant
+    for _ in range(4):
+        mon.observe("t", wide, 50)
+    assert mon.widen_weight("t") == 0.0   # below min_samples
+    for _ in range(20):
+        mon.observe("t", wide, 5000)      # every outcome escapes coverage
+    w = mon.widen_weight("t")
+    assert w == 0.5                       # deficit-driven, capped
+    s = mon.summary()["t"]
+    assert s["count"] == 24
+    assert s["coverage@0.9"] < 0.2
+    assert s["observed_over_predicted"] > 10
+    assert s["crps_tokens"] > 0
+    # a well-covered tenant widens by exactly 0
+    for _ in range(20):
+        mon.observe("ok", wide, 100)
+    assert mon.widen_weight("ok") == 0.0
+
+
+def test_scheduler_applies_conformal_widening():
+    mon = CalibrationMonitor(min_samples=4, quantiles=(0.5, 0.9))
+    tiny = TinyPredictor().predict("p", 1)
+    for _ in range(8):
+        mon.observe("hot", tiny, 500)     # badly under-covered tenant
+    sched = Scheduler(policy=make_policy("sagesched"),
+                      predictor=TinyPredictor(), calibration=mon)
+    sr_cold = sched.admit("a", "p", 10, arrival=0.0, tenant="cold")
+    sr_hot = sched.admit("b", "p", 10, arrival=1.0, tenant="hot")
+    assert sched.stats["conformal_widenings"] == 1
+    # the stored belief widened toward the flat prior...
+    assert sr_hot.length_dist.lengths.max() > sr_cold.length_dist.lengths.max()
+    # ...but the graded admission-time prediction stays pristine
+    np.testing.assert_array_equal(sr_hot.pred_dist.lengths,
+                                  tiny.lengths)
+    # completions feed the monitor keyed by tenant
+    sched.on_complete("a", output_len=4)
+    assert sched.calibration_summary()["cold"]["count"] == 1
+
+
+# ------------------------------------------------------- drift injection
+
+def test_flaky_predictor_drift_ramp():
+    inner = TinyPredictor()
+    flaky = FlakyPredictor(inner, mode="drift", fail_after=2,
+                           n_failures=4, drift_scale=3.0, drift_bias=10.0)
+    base = inner.predict("p", 1)
+    d0 = flaky.predict("p", 1)            # before the window: verbatim
+    np.testing.assert_array_equal(d0.lengths, base.lengths)
+    flaky.predict("p", 1)
+    for _ in range(3):
+        flaky.predict("p", 1)
+    d_end = flaky.predict("p", 1)         # last call of the window: full
+    want = scale_distribution(base, 3.0, 10.0)
+    np.testing.assert_array_equal(d_end.lengths, want.lengths)
+    np.testing.assert_allclose(d_end.probs, want.probs)
+    assert flaky.faults == 4
+
+
+def test_scale_distribution_merges_collisions():
+    d = LengthDistribution(np.array([1, 2, 3]), np.array([.2, .3, .5]))
+    s = scale_distribution(d, 0.4)        # 1,2,3 -> 1,1,1
+    np.testing.assert_array_equal(s.lengths, [1])
+    assert np.cumsum(s.probs)[-1] == pytest.approx(1.0)
+
+
+def test_workload_drift_seed_compatibility():
+    prof = [make_profile("sharegpt")]
+    base = generate_workload(prof, 60, rps=10.0, seed=9)
+    same = generate_workload(prof, 60, rps=10.0, seed=9, drift_scale=1.0)
+    drifted = generate_workload(prof, 60, rps=10.0, seed=9,
+                                drift_scale=2.0, drift_mode="step",
+                                drift_start=0.5)
+    for a, b, d in zip(base, same, drifted):
+        # scale 1.0 is bit-identical to the undrifted generator
+        assert (a.arrival, a.prompt, a.input_len, a.true_output_len) == \
+               (b.arrival, b.prompt, b.input_len, b.true_output_len)
+        assert b.drift_factor == 1.0
+        # a drifted trace touches ONLY the true lengths
+        assert (a.arrival, a.prompt, a.input_len) == \
+               (d.arrival, d.prompt, d.input_len)
+    first, second = drifted[:30], drifted[30:]
+    assert all(r.drift_factor == 1.0 for r in first)
+    assert all(r.drift_factor == 2.0 for r in second)
+    assert any(d.true_output_len != a.true_output_len
+               for a, d in zip(base[30:], second))
+
+
+def test_workload_drift_mode_validation():
+    with pytest.raises(ValueError):
+        generate_workload([make_profile("sharegpt")], 4, rps=1.0,
+                          drift_mode="sideways")
+
+
+# --------------------------------------------------------- gateway summary
+
+def test_gateway_summary_surfaces_calibration_and_hedge():
+    cfg = get_config("llama3.2-1b", reduced=True)
+    sched = Scheduler(policy=make_policy("hedged"),
+                      predictor=TinyPredictor())
+    eng = ServingEngine(model=build_model(cfg), scheduler=sched,
+                        n_slots=2, max_seq_len=96, seed=0,
+                        clock=VirtualClock())
+    gw = Gateway(eng, GatewayConfig(max_inflight=2))
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        toks = [int(t) for t in rng.integers(3, cfg.vocab_size, 6)]
+        gw.offer(ServeRequest(request_id=f"g{i}", prompt="p",
+                              prompt_tokens=toks, max_new_tokens=4,
+                              eos_token=0))
+    gw.run_until_drained(max_steps=500)
+    s = gw.summary()
+    assert s["queued"] == 0 and s["inflight"] == 0
+    assert s["dispositions"] == {"FINISHED": 2}
+    assert s["disposition_reasons"] == {"finished:length": 2}
+    assert s["calibration"]["default"]["count"] == 2
+    assert s["hedge"]["updates"] == 2
+    assert not s["degraded"]
+    # engine metrics carry the same calibration table
+    assert eng.metrics.calibration == s["calibration"]
+    assert "calibration" in eng.metrics.summary([])
